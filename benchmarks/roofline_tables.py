@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from reports/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_tables [--dir reports/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def load(dir_):
+    reps = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            reps.append(json.load(f))
+    return reps
+
+
+def dryrun_table(reps):
+    rows = ["| arch | shape | mesh | status | HBM/dev GiB | collectives/dev GiB | cross-pod GiB |",
+            "|---|---|---|---|---|---|---|"]
+    for r in reps:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | skipped¹ | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | FAILED | — | — | — |")
+            continue
+        hbm = fmt_bytes(r["memory"]["total_hbm_bytes"])
+        if "roofline" in r:
+            coll = fmt_bytes(r["roofline"]["collective_bytes_per_dev"])
+            xp = fmt_bytes(r["roofline"]["cross_pod_bytes_per_dev"])
+        else:
+            coll = xp = "—"
+        rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | ok | {hbm} | {coll} | {xp} |")
+    return "\n".join(rows)
+
+
+def roofline_table(reps):
+    rows = ["| arch | shape | compute s | memory s | collective s | bound | MODEL_FLOPs/dev | useful ratio | note |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in reps:
+        if r.get("multi_pod") or r["status"] != "ok" or "roofline" not in r:
+            continue
+        t = r["roofline"]
+        note = ""
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {t['bound']} | "
+            f"{t['model_flops_per_dev']:.3e} | "
+            f"{t['useful_flop_ratio']:.2f} | {note} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="reports/dryrun")
+    args = ap.parse_args()
+    reps = load(args.dir)
+    print("## Dry-run matrix\n")
+    print(dryrun_table(reps))
+    print("\n¹ long_500k requires sub-quadratic attention (DESIGN.md §4).\n")
+    print("## Roofline (single-pod 16x16)\n")
+    print(roofline_table(reps))
+
+
+if __name__ == "__main__":
+    main()

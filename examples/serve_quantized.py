@@ -1,0 +1,29 @@
+"""Serve a small model with batched requests and packed-int4 weights — the
+paper's deployment scenario (dense arrays of 4-bit multipliers for edge
+inference).  Compares W4A4-packed against bf16 serving on the same prompts.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+import json
+
+from repro.launch.serve import serve
+
+
+def main():
+    common = dict(reduced=True, batch=4, prompt_len=32, gen=16)
+    for quant in ("float", "w4a16_packed", "w4a4_packed"):
+        out = serve("qwen2-0.5b", quant_backend=quant, **common)
+        print(f"{quant:14s} prefill={out['prefill_s']*1e3:7.1f} ms "
+              f"decode={out['decode_tok_per_s']:6.1f} tok/s")
+    # int8 KV cache on top of packed weights (decode memory-term lever)
+    out = serve("qwen2-0.5b", quant_backend="w4a4_packed",
+                cache_dtype="int8", **common)
+    print(f"{'w4a4+int8kv':14s} prefill={out['prefill_s']*1e3:7.1f} ms "
+          f"decode={out['decode_tok_per_s']:6.1f} tok/s")
+    print("serving OK (greedy tokens):",
+          json.dumps(out["generated"][0][:6]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Checkpointing substrate."""
+from .ckpt import (  # noqa: F401
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

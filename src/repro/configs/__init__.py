@@ -1,0 +1,38 @@
+"""Architecture registry: the 10 assigned configs + the paper's own
+multiplier-array 'config'.  Each file documents its public source and
+verification tier.  Select with ``--arch <id>``."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ArchConfig, Runtime, SHAPES, Shape, runnable, COST_PROBE  # noqa: F401
+
+from .musicgen_large import CONFIG as _musicgen
+from .mamba2_130m import CONFIG as _mamba2
+from .qwen3_4b import CONFIG as _qwen3
+from .internlm2_20b import CONFIG as _internlm2
+from .starcoder2_7b import CONFIG as _starcoder2
+from .qwen2_0_5b import CONFIG as _qwen2_05
+from .llama4_maverick import CONFIG as _llama4
+from .arctic_480b import CONFIG as _arctic
+from .qwen2_vl_2b import CONFIG as _qwen2_vl
+from .recurrentgemma_9b import CONFIG as _rgemma
+
+REGISTRY: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _musicgen, _mamba2, _qwen3, _internlm2, _starcoder2,
+        _qwen2_05, _llama4, _arctic, _qwen2_vl, _rgemma,
+    ]
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def all_archs():
+    return sorted(REGISTRY)

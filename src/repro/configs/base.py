@@ -1,0 +1,169 @@
+"""Architecture + runtime configuration dataclasses.
+
+`ArchConfig` is the *identity* of a model (frozen, hashable, from public
+literature); `Runtime` holds execution knobs (scan vs unroll, attention
+implementation, remat, quant backend) that never change the math, only the
+compiled schedule — they are the §Perf hillclimbing levers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from repro.core.qlinear import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 => d_model // n_heads
+    # attention flavour
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    mlp_bias: bool = False
+    ffn_type: str = "swiglu"      # swiglu | gelu
+    rope: str = "rope"            # rope | mrope | none (sinusoidal abs)
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    moe_dense_ff: int = 0         # parallel dense-residual FFN (arctic)
+    shared_expert: bool = False   # always-on expert (llama4)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+    # hybrid (recurrentgemma): layer pattern repeated + tail
+    pattern: Tuple[str, ...] = ("A",)   # per-layer mixer types in one repeat
+    tail: Tuple[str, ...] = ()          # trailing layers after the repeats
+    local_window: int = 0               # >0: sliding-window attention
+    lru_width: int = 0
+    # misc
+    norm_eps: float = 1e-6
+    quant: QuantConfig = QuantConfig(backend="fake_quant")
+    notes: str = ""
+    source: str = ""
+
+    # ------------------------------------------------------------------ api
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_repeats(self) -> int:
+        assert (self.n_layers - len(self.tail)) % len(self.pattern) == 0, self.name
+        return (self.n_layers - len(self.tail)) // len(self.pattern)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up so the model axis (<=16) always divides it."""
+        return -(-self.vocab // 128) * 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True iff decode cost/cache is O(1)-or-O(window) in context length,
+        which is what long_500k requires (SSM state or local-window attn)."""
+        return self.family == "ssm" or (
+            self.family == "hybrid" and self.local_window > 0
+        )
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A small same-family config for CPU smoke tests."""
+        base = dict(
+            n_layers=len(self.pattern) + len(self.tail),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            head_dim=16,
+            n_experts=8 if self.n_experts else 0,
+            d_ff_expert=64 if self.d_ff_expert else 0,
+            moe_dense_ff=64 if self.moe_dense_ff else 0,
+            ssm_state=32 if self.ssm_state else 0,
+            ssm_headdim=16,
+            ssm_chunk=16,
+            local_window=16 if self.local_window else 0,
+            lru_width=64 if self.lru_width else 0,
+            mrope_sections=(2, 3, 3),   # sums to reduced head_dim/2
+        )
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    """An assigned input-shape cell."""
+
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def runnable(arch: ArchConfig, shape: Shape) -> bool:
+    """long_500k needs sub-quadratic attention (see DESIGN.md §4)."""
+    if shape.name == "long_500k":
+        return arch.sub_quadratic
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution knobs — §Perf levers; never change model math."""
+
+    scan_layers: bool = True
+    attn_impl: str = "chunked"      # chunked | full
+    attn_chunk_q: int = 512
+    loss_chunk: int = 4096          # 0 = unchunked
+    remat: str = "dots"             # none | dots | full
+    quant_backend: Optional[str] = None  # override ArchConfig.quant.backend
+    cache_dtype: str = "bfloat16"   # KV-cache dtype: bfloat16 | int8 (§Perf)
+    compute_dtype: str = "bfloat16"
+    aligned_decode: bool = True     # batch rows share positions: DUS cache
+                                    # writes instead of scatter (§Perf)
+
+    def quant_cfg(self, arch: ArchConfig) -> QuantConfig:
+        if self.quant_backend is None:
+            return arch.quant
+        return dataclasses.replace(arch.quant, backend=self.quant_backend)
+
+
+COST_PROBE = Runtime(scan_layers=False, attn_impl="full", loss_chunk=0, remat="none")

@@ -1,0 +1,201 @@
+"""Baseline exact 4-bit multipliers (paper §III / Tables II-III comparison set).
+
+Implemented as netlists (exhaustively verified):
+
+* ``lm``  -- the prior 12-LUT / 1-CARRY4 design point of Yao & Zhang [1].
+  The excerpt does not publish LM's internal netlist, so we re-implement it at
+  its published resource point: the same column-compression front end as the
+  proposed design, but with the top product bit taken as CO[3] routed through
+  the general fabric into a pass-through LUT (the slow path the paper calls
+  out), i.e. proposed-minus-the-chain-B-trick: 12 LUTs + 1 CARRY4.
+
+* ``acc_ullah`` -- reconstruction of Ullah et al. [2]: two exact 4x2
+  multipliers (each 5 LUTs + 1 CARRY4) plus a 6-bit carry-chain final adder
+  (6 LUTs + 2 CARRY4).  Our reconstruction lands at 16 LUTs / 4 CARRY4 vs the
+  published 15 / 3 (they share one LUT and pack the chains tighter); both
+  numbers are reported in benchmarks with provenance columns.
+
+* ``behavioral`` -- the ``p = a * b`` RTL description (pure jnp multiply);
+  resources/CPD for its two synthesis strategies are published-data-only rows.
+
+Literature rows [3][4][5][6] and Vivado IP are data-only (`PUBLISHED_ROWS`).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from .mult4_proposed import build_proposed_mult4
+from .netlist import CONST0, CONST1, Carry4, Lut, Netlist
+
+
+def build_lm_mult4() -> Netlist:
+    """12-LUT / 1-CARRY4 design point (LM [1] resource-equivalent)."""
+    base = build_proposed_mult4()
+    cells = [c for c in base.cells if c.name not in ("CarryChainA", "CarryChainB")]
+    chain = Carry4(
+        name="CarryChainA",
+        s=["Prop0", "Prop1", "Prop2", "Prop3"],
+        di=["Gen0", "Gen1", "Gen2", "Gen3"],
+        cin="C0",
+        o_out=["P3", "P4", "P5", "P6"],
+        co_out=[None, None, None, "CO3A"],
+    )
+    # P7: CO[3] must traverse the neighbouring CARRY4 and the general routing
+    # fabric to reach a LUT (paper §II last paragraph) -- modelled by the
+    # timing engine via the `from_co_fabric` edge class.
+    p7lut = Lut(
+        name="LUT12_P7",
+        inputs=["CO3A", CONST1, CONST1, CONST1, CONST1, CONST1],
+        fn_o6=lambda v: v["CO3A"],
+        out_o6="P7",
+    )
+    return Netlist(
+        name="lm",
+        inputs=base.inputs,
+        outputs=base.outputs,
+        cells=cells + [chain, p7lut],
+    )
+
+
+def _build_mult4x2(prefix: str, b_lo: str, b_hi: str) -> list:
+    """Exact 4x2 multiplier: A[3:0] * (b_hi,b_lo) -> m0..m5 (5 LUTs + 1 CARRY4)."""
+    A = [f"A{i}" for i in range(4)]
+    m = [f"{prefix}m{i}" for i in range(6)]
+    lut_lo = Lut(
+        name=f"{prefix}LUTlo",
+        inputs=[A[0], A[1], b_lo, b_hi, CONST1, CONST1],
+        fn_o6=lambda v, bl=b_lo, bh=b_hi: (v["A1"] & v[bl]) ^ (v["A0"] & v[bh]),
+        out_o6=m[1],
+        fn_o5=lambda v, bl=b_lo: v["A0"] & v[bl],
+        out_o5=m[0],
+    )
+    lut_c1 = Lut(
+        name=f"{prefix}LUTc1",
+        inputs=[A[0], A[1], b_lo, b_hi, CONST1, CONST1],
+        fn_o6=lambda v, bl=b_lo, bh=b_hi: (v["A1"] & v[bl]) & (v["A0"] & v[bh]),
+        out_o6=f"{prefix}c1",
+    )
+    lut_s0 = Lut(
+        name=f"{prefix}LUTs0",
+        inputs=[A[1], A[2], b_lo, b_hi, CONST1, CONST1],
+        fn_o6=lambda v, bl=b_lo, bh=b_hi: (v["A2"] & v[bl]) ^ (v["A1"] & v[bh]),
+        out_o6=f"{prefix}p2",
+        fn_o5=lambda v, bl=b_lo, bh=b_hi: (v["A2"] & v[bl]) & (v["A1"] & v[bh]),
+        out_o5=f"{prefix}g2",
+    )
+    lut_s1 = Lut(
+        name=f"{prefix}LUTs1",
+        inputs=[A[2], A[3], b_lo, b_hi, CONST1, CONST1],
+        fn_o6=lambda v, bl=b_lo, bh=b_hi: (v["A3"] & v[bl]) ^ (v["A2"] & v[bh]),
+        out_o6=f"{prefix}p3",
+        fn_o5=lambda v, bl=b_lo, bh=b_hi: (v["A3"] & v[bl]) & (v["A2"] & v[bh]),
+        out_o5=f"{prefix}g3",
+    )
+    lut_s2 = Lut(
+        name=f"{prefix}LUTs2",
+        inputs=[A[3], b_hi, CONST1, CONST1, CONST1, CONST1],
+        fn_o6=lambda v, bh=b_hi: v["A3"] & v[bh],
+        out_o6=f"{prefix}p4",
+    )
+    chain = Carry4(
+        name=f"{prefix}Chain",
+        s=[f"{prefix}p2", f"{prefix}p3", f"{prefix}p4", CONST0],
+        di=[f"{prefix}g2", f"{prefix}g3", CONST0, CONST0],
+        cin=f"{prefix}c1",
+        o_out=[m[2], m[3], m[4], m[5]],
+        co_out=[None, None, None, None],
+    )
+    return [lut_lo, lut_c1, lut_s0, lut_s1, lut_s2, chain]
+
+
+def build_acc_mult4() -> Netlist:
+    """Reconstruction of Acc [2]: two 4x2 multipliers + carry-chain adder."""
+    lo = _build_mult4x2("L", "B0", "B1")
+    hi = _build_mult4x2("H", "B2", "B3")
+    # Final add: P = L + (H << 2); P0/P1 pass straight through.
+    add_luts = []
+    for i in range(4):
+        add_luts.append(
+            Lut(
+                name=f"ADDp{i}",
+                inputs=[f"Lm{i+2}", f"Hm{i}", CONST1, CONST1, CONST1, CONST1],
+                fn_o6=lambda v, l=f"Lm{i+2}", h=f"Hm{i}": v[l] ^ v[h],
+                out_o6=f"ap{i}",
+                fn_o5=lambda v, l=f"Lm{i+2}", h=f"Hm{i}": v[l] & v[h],
+                out_o5=f"ag{i}",
+            )
+        )
+    # pass LUTs for the two top bits (S pin must come from a LUT O6)
+    for j, src in ((4, "Hm4"), (5, "Hm5")):
+        add_luts.append(
+            Lut(
+                name=f"ADDpass{j}",
+                inputs=[src, CONST1, CONST1, CONST1, CONST1, CONST1],
+                fn_o6=lambda v, s=src: v[s],
+                out_o6=f"ap{j}",
+            )
+        )
+    chain1 = Carry4(
+        name="AddChain1",
+        s=["ap0", "ap1", "ap2", "ap3"],
+        di=["ag0", "ag1", "ag2", "ag3"],
+        cin=CONST0,
+        o_out=["P2", "P3", "P4", "P5"],
+        co_out=[None, None, None, "addco3"],
+    )
+    chain2 = Carry4(
+        name="AddChain2",
+        s=["ap4", "ap5", CONST0, CONST0],
+        di=[CONST0, CONST0, CONST0, CONST0],
+        cin="addco3",
+        o_out=["P6", "P7", None, None],
+        co_out=[None, None, None, None],
+        cin_dedicated=True,
+    )
+    # rename L's m0/m1 to P0/P1 via output aliasing: evaluate then map.
+    alias0 = Lut(
+        name="AliasP0",
+        inputs=["Lm0", CONST1, CONST1, CONST1, CONST1, CONST1],
+        fn_o6=lambda v: v["Lm0"],
+        out_o6="P0",
+    )
+    alias1 = Lut(
+        name="AliasP1",
+        inputs=["Lm1", CONST1, CONST1, CONST1, CONST1, CONST1],
+        fn_o6=lambda v: v["Lm1"],
+        out_o6="P1",
+    )
+    # NOTE: alias LUTs exist only so `outputs` resolve uniformly; they are
+    # excluded from the LUT count (a real design renames the net).
+    nl = Netlist(
+        name="acc_ullah",
+        inputs=[f"A{i}" for i in range(4)] + [f"B{i}" for i in range(4)],
+        outputs=[f"P{i}" for i in range(8)],
+        cells=lo + hi + add_luts + [chain1, chain2, alias0, alias1],
+    )
+    nl.alias_luts = ("AliasP0", "AliasP1")  # type: ignore[attr-defined]
+    return nl
+
+
+def behavioral_mult4(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """The `p = a*b` RTL description (paper's "Exact" baseline)."""
+    return (jnp.asarray(a, jnp.uint32) * jnp.asarray(b, jnp.uint32)).astype(jnp.uint8)
+
+
+#: Published rows for designs we do not re-implement (paper Tables II/III).
+PUBLISHED_ROWS: Dict[str, Dict[str, object]] = {
+    "proposed": dict(luts=11, carry4=2, cpd=2.750, logic=1.302, net=1.448),
+    "lm": dict(luts=12, carry4=1, cpd=3.299, logic=1.910, net=1.389),
+    "acc_ullah": dict(luts=15, carry4=3, cpd=3.979, logic=1.978, net=2.001),
+    "smapproxlib_ullah18": dict(luts=12, carry4=3, cpd=None, logic=None, net=None),
+    "rehman16": dict(luts=16, carry4=0, cpd=None, logic=None, net=None),
+    "wang23": dict(luts=13, carry4=4, cpd=None, logic=None, net=None),
+    "loam_guo24": dict(luts=13, carry4=1, cpd=3.301, logic=1.555, net=1.746),
+    "exact_area_opt": dict(luts=15, carry4=2, cpd=2.728, logic=1.259, net=1.469),
+    "exact_perf_opt": dict(luts=20, carry4=2, cpd=2.533, logic=1.224, net=1.309),
+    "vivado_ip_area_opt": dict(luts=13, carry4=2, cpd=3.739, logic=1.607, net=2.132),
+    "vivado_ip_perf_opt": dict(luts=15, carry4=2, cpd=3.393, logic=1.586, net=1.807),
+}

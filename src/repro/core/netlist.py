@@ -1,0 +1,251 @@
+"""Bit-exact simulation of Xilinx 7-series logic primitives (LUT6 / LUT6_2 / CARRY4).
+
+This module is the *faithful-reproduction substrate* for Kida & Sato's 4-bit
+multiplier: it models exactly the primitives the paper instantiates in Verilog
+(Section II / Fig. 1-2) and evaluates whole netlists either
+
+  * ``mode="direct"``  -- each LUT's Boolean function evaluated symbolically
+    (fast, vectorized jnp bitwise ops), or
+  * ``mode="init"``    -- each LUT evaluated by indexing its synthesized 64-bit
+    INIT truth table, i.e. exactly what the FPGA hardware does.
+
+Both modes are pure-jnp, jittable and vmap-able over arbitrarily shaped uint8
+bit tensors, so a netlist doubles as a vectorized "array of multipliers" -- the
+deployment scenario the paper targets (Section I).
+
+INIT semantics (matches Vivado's LUT6/LUT6_2 primitives):
+  * LUT6:    O6 = INIT[ I5<<5 | I4<<4 | I3<<3 | I2<<2 | I1<<1 | I0 ]
+  * LUT6_2:  O6 as above (I5 is tied to 1 in dual-output use, selecting the
+             upper 32-bit half); O5 = INIT[ I4<<4 | ... | I0 ] (lower half).
+Unused inputs are tied to logic '1' (paper, Table I caption).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+Bit = "jnp.ndarray"  # uint8 tensor holding 0/1
+BoolFn = Callable[[Mapping[str, object]], object]
+
+CONST0 = "0"
+CONST1 = "1"
+
+
+def _as_bit(x) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Lut:
+    """A LUT6 (single output) or LUT6_2 (dual output, shared inputs).
+
+    ``inputs`` are signal names in I0..I5 order; missing/extra positions are
+    tied to '1' exactly as the paper does.  ``fn_o6``/``fn_o5`` map a dict of
+    named input bits (ints 0/1 during INIT synthesis, jnp tensors during
+    evaluation) to the output bit.  For a LUT6_2 both are given and the pair
+    must share <=5 real inputs (hardware constraint; checked).
+    """
+
+    name: str
+    inputs: Sequence[str]           # length <= 6, signal names or "0"/"1"
+    fn_o6: BoolFn
+    out_o6: str
+    fn_o5: Optional[BoolFn] = None
+    out_o5: Optional[str] = None
+
+    def __post_init__(self):
+        real = [s for s in self.inputs if s not in (CONST0, CONST1)]
+        if len(self.inputs) > 6:
+            raise ValueError(f"{self.name}: >6 inputs")
+        if self.is_dual and len(real) > 5:
+            raise ValueError(
+                f"{self.name}: LUT6_2 dual-output allows at most 5 shared real "
+                f"inputs (I5 must be tied high); got {real}"
+            )
+
+    @property
+    def is_dual(self) -> bool:
+        return self.fn_o5 is not None
+
+    @property
+    def padded_inputs(self) -> List[str]:
+        """Inputs padded to length 6 with tied-'1' (paper convention)."""
+        pads = [CONST1] * (6 - len(self.inputs))
+        return list(self.inputs) + pads
+
+    # -- INIT synthesis ----------------------------------------------------
+    def init_value(self) -> int:
+        """Synthesize the 64-bit INIT word from the Boolean functions.
+
+        For dual-output LUTs the upper 32 bits hold O6 (with I5=1) and the
+        lower 32 bits hold O5, per the LUT6_2 primitive.
+        """
+        init = 0
+        ins = self.padded_inputs
+        for idx in range(64):
+            bits = {}
+            ok = True
+            for pos, sig in enumerate(ins):
+                b = (idx >> pos) & 1
+                if sig == CONST0:
+                    if b != 0:
+                        ok = False
+                        break
+                elif sig == CONST1:
+                    if b != 1:
+                        ok = False
+                        break
+                else:
+                    bits[sig] = b
+            if self.is_dual:
+                if idx < 32:
+                    # lower half: O5 truth table over I0..I4
+                    fn = self.fn_o5
+                else:
+                    fn = self.fn_o6
+            else:
+                fn = self.fn_o6
+            if not ok:
+                # unreachable row under tie constraints; re-evaluate anyway so
+                # the table is fully specified (use raw bits, ties included)
+                bits = {
+                    sig: (idx >> pos) & 1
+                    for pos, sig in enumerate(ins)
+                    if sig not in (CONST0, CONST1)
+                }
+            if int(bool(fn(bits))):
+                init |= 1 << idx
+        return init
+
+    # -- evaluation ---------------------------------------------------------
+    def eval_direct(self, env: Dict[str, jnp.ndarray]) -> None:
+        env[self.out_o6] = _as_bit(self.fn_o6(env)) & jnp.uint8(1)
+        if self.is_dual:
+            env[self.out_o5] = _as_bit(self.fn_o5(env)) & jnp.uint8(1)
+
+    def eval_init(self, env: Dict[str, jnp.ndarray]) -> None:
+        init = self.init_value()
+        lo = np.uint32(init & 0xFFFFFFFF)
+        hi = np.uint32(init >> 32)
+        ins = self.padded_inputs
+        idx = None
+        for pos, sig in enumerate(ins):
+            if sig == CONST0:
+                b = jnp.uint32(0)
+            elif sig == CONST1:
+                b = jnp.uint32(1)
+            else:
+                b = env[sig].astype(jnp.uint32)
+            term = b << pos
+            idx = term if idx is None else idx | term
+        # O6 = INIT[idx] over the full 64-bit table (split into two u32 words)
+        sel_hi = (idx >> 5) & 1
+        k = idx & 31
+        o6 = jnp.where(
+            sel_hi == 1,
+            (jnp.uint32(hi) >> k) & 1,
+            (jnp.uint32(lo) >> k) & 1,
+        ).astype(jnp.uint8)
+        env[self.out_o6] = o6
+        if self.is_dual:
+            k5 = idx & 31
+            env[self.out_o5] = ((jnp.uint32(lo) >> k5) & 1).astype(jnp.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class Carry4:
+    """The 7-series CARRY4 block: 4 (MUXCY + XORCY) stages.
+
+    Per stage i:  O[i] = S[i] ^ C[i];  C[i+1] = S[i] ? C[i] : DI[i].
+    ``cin`` may be a fabric signal (enters via CYINIT) or the name of another
+    CARRY4's CO[3] (dedicated CO->CIN link -- ``cin_dedicated=True``), which
+    matters only to the timing model.
+    """
+
+    name: str
+    s: Sequence[str]                 # 4 signal names ("0"/"1" allowed)
+    di: Sequence[str]                # 4 signal names
+    cin: str
+    o_out: Sequence[Optional[str]]   # names for O[0..3] (None = unused)
+    co_out: Sequence[Optional[str]]  # names for CO[0..3] (None = unused)
+    cin_dedicated: bool = False
+
+    def evaluate(self, env: Dict[str, jnp.ndarray]) -> None:
+        def get(sig):
+            if sig == CONST0:
+                return jnp.uint8(0)
+            if sig == CONST1:
+                return jnp.uint8(1)
+            return env[sig]
+
+        c = get(self.cin)
+        for i in range(4):
+            s_i = get(self.s[i])
+            di_i = get(self.di[i])
+            o_i = s_i ^ c
+            c = jnp.where(s_i == 1, c, di_i).astype(jnp.uint8)
+            if self.o_out[i] is not None:
+                env[self.o_out[i]] = o_i
+            if self.co_out[i] is not None:
+                env[self.co_out[i]] = c
+
+
+@dataclasses.dataclass
+class Netlist:
+    """An ordered netlist of LUTs and CARRY4s with named inputs/outputs."""
+
+    name: str
+    inputs: Sequence[str]
+    outputs: Sequence[str]
+    cells: Sequence[object]          # Lut | Carry4, in dependency order
+
+    def evaluate_bits(
+        self, env: Dict[str, jnp.ndarray], mode: str = "direct"
+    ) -> Dict[str, jnp.ndarray]:
+        env = dict(env)
+        for cell in self.cells:
+            if isinstance(cell, Lut):
+                if mode == "init":
+                    cell.eval_init(env)
+                else:
+                    cell.eval_direct(env)
+            elif isinstance(cell, Carry4):
+                cell.evaluate(env)
+            else:
+                raise TypeError(type(cell))
+        return env
+
+    def __call__(self, a: jnp.ndarray, b: jnp.ndarray, mode: str = "direct") -> jnp.ndarray:
+        """Multiply unsigned 4-bit tensors elementwise through the netlist.
+
+        ``a``/``b`` are integer tensors with values in [0, 15]; returns the
+        uint8 product tensor, computed bit-by-bit through the simulated gates.
+        """
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        env: Dict[str, jnp.ndarray] = {}
+        for i in range(4):
+            env[f"A{i}"] = ((a >> i) & 1).astype(jnp.uint8)
+            env[f"B{i}"] = ((b >> i) & 1).astype(jnp.uint8)
+        env = self.evaluate_bits(env, mode=mode)
+        out = jnp.zeros(jnp.broadcast_shapes(a.shape, b.shape), dtype=jnp.uint8)
+        for i, sig in enumerate(self.outputs):
+            out = out | (env[sig].astype(jnp.uint8) << i)
+        return out
+
+    # -- resource accounting (paper Table II) -------------------------------
+    def lut_count(self) -> int:
+        return sum(1 for c in self.cells if isinstance(c, Lut))
+
+    def carry4_count(self) -> int:
+        return sum(1 for c in self.cells if isinstance(c, Carry4))
+
+    def dual_lut_count(self) -> int:
+        return sum(1 for c in self.cells if isinstance(c, Lut) and c.is_dual)
+
+    def init_table(self) -> Dict[str, int]:
+        return {c.name: c.init_value() for c in self.cells if isinstance(c, Lut)}

@@ -1,0 +1,207 @@
+"""QuantizedLinear: the paper's technique as a first-class framework feature.
+
+Every projection in every architecture config routes through `qdense`.  The
+backend is selected by `QuantConfig.backend`:
+
+  float       -- plain bf16/f32 GEMM (reference / ablation baseline)
+  fake_quant  -- QAT: STE fake-quant on weights (per-out-channel) and
+                 activations (per-tensor dynamic); float GEMM. Training mode.
+  int_sim     -- W4A4 integer GEMM in XLA (int8 dot, int32 accum, dequant
+                 epilogue): identical math to kernels/int4_matmul.py, usable
+                 inside multi-device pjit graphs (dry-run / CPU).
+  pallas_int4 -- kernels.ops.int4_matmul (real TPU path / interpret tests).
+  w4a16       -- weight-only serving: kernels.ops.w4a16_matmul (or its XLA
+                 twin inside pjit graphs).
+  netlist     -- bit-exact FPGA-netlist simulation of every 4-bit product
+                 (the paper's circuit, used as the end-to-end oracle; O(bits)
+                 slower, tests / tiny shapes only).
+
+Weights are stored as float master copies (training) — serving-time packing is
+done once by `pack_params`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .mult4_proposed import build_proposed_mult4
+from .quant import (
+    fake_quant,
+    pack_int4,
+    quant_scale,
+    quantize,
+    to_unsigned_mag,
+    unpack_int4,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    backend: str = "fake_quant"     # float | fake_quant | int_sim | pallas_int4 | w4a16 | netlist
+    w_bits: int = 4
+    a_bits: int = 4
+    group_size: int = 0             # 0 => per-output-channel scales
+    quantize_embedding: bool = False
+
+    @property
+    def quantized(self) -> bool:
+        return self.backend != "float"
+
+
+FLOAT = QuantConfig(backend="float")
+QAT_W4A4 = QuantConfig(backend="fake_quant")
+INT_SIM_W4A4 = QuantConfig(backend="int_sim")
+
+
+def _flatten_batch(x: jnp.ndarray):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def qdense(
+    w,                              # [K, N] float master weight OR packed dict
+    x: jnp.ndarray,                 # [..., K]
+    cfg: QuantConfig,
+    bias: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Quantized dense layer. Output dtype follows x.
+
+    `w` may be a pre-packed serving weight (`{"packed": uint8 [K, N/2],
+    "scale": f32 [1, N]}`, from `pack_tree`): weight bytes drop 4x vs bf16 —
+    the paper's area argument at system level.  Packed backends:
+    `w4a16_packed` (dequant + bf16 GEMM) and `w4a4_packed` (dynamic per-token
+    int4 activations + int8 GEMM + int32 accum, the full technique).
+    """
+    if isinstance(w, dict) and "packed" in w:
+        return _qdense_packed(w, x, cfg, bias)
+    if cfg.backend in ("w4a4_packed", "w4a16_packed"):
+        # weight not packed (too small / excluded by pack_tree): equivalent
+        # on-the-fly path
+        cfg = dataclasses.replace(
+            cfg, backend="int_sim" if cfg.backend == "w4a4_packed" else "w4a16")
+    out_dtype = x.dtype
+    if cfg.backend == "float":
+        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    elif cfg.backend == "fake_quant":
+        wq = fake_quant(w, axis=0, bits=cfg.w_bits)          # per-out-channel
+        # per-token activation scales: keeps prefill/decode bit-consistent
+        xq = fake_quant(x, axis=-1, bits=cfg.a_bits)         # stays x.dtype
+        y = jnp.einsum("...k,kn->...n", xq, wq.astype(x.dtype))
+    elif cfg.backend in ("int_sim", "pallas_int4"):
+        x2, lead = _flatten_batch(x.astype(jnp.float32))
+        a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)   # per-row dynamic
+        a_q = quantize(x2, a_scale, bits=cfg.a_bits)
+        w_scale = quant_scale(w, axis=0, bits=cfg.w_bits)    # [1, N]
+        w_q = quantize(w, w_scale, bits=cfg.w_bits)
+        if cfg.backend == "pallas_int4":
+            y = ops.int4_matmul(a_q, a_scale, pack_int4(w_q, -1), w_scale)
+        else:
+            acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+            y = acc.astype(jnp.float32) * a_scale * w_scale
+        y = y.reshape(*lead, w.shape[1])
+    elif cfg.backend == "w4a16":
+        from .quant import group_quantize
+
+        x2, lead = _flatten_batch(x)
+        g = cfg.group_size if cfg.group_size else w.shape[0]
+        w_q, w_scale = group_quantize(w, g, bits=cfg.w_bits)
+        y = ops.w4a16_matmul(x2, pack_int4(w_q, -1), w_scale, g)
+        y = y.reshape(*lead, w.shape[1])
+    elif cfg.backend == "netlist":
+        y = _netlist_matmul(w, x, cfg)
+    else:
+        raise ValueError(cfg.backend)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y.astype(out_dtype)
+
+
+def _netlist_matmul(w: jnp.ndarray, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """End-to-end oracle: every 4-bit product through the simulated circuit."""
+    nl = build_proposed_mult4()
+    x2, lead = _flatten_batch(x.astype(jnp.float32))
+    a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)
+    a_q = quantize(x2, a_scale, bits=cfg.a_bits)             # [M, K]
+    w_scale = quant_scale(w, axis=0, bits=cfg.w_bits)
+    w_q = quantize(w, w_scale, bits=cfg.w_bits)              # [K, N]
+    mag_a, sign_a = to_unsigned_mag(a_q)
+    mag_w, sign_w = to_unsigned_mag(w_q)
+    # products [M, K, N] through the netlist (vectorized over all pairs)
+    prod = nl(mag_a[:, :, None], mag_w[None, :, :]).astype(jnp.int32)
+    prod = prod * sign_a[:, :, None] * sign_w[None, :, :]
+    acc = jnp.sum(prod, axis=1).astype(jnp.float32)
+    y = acc * a_scale * w_scale
+    return y.reshape(*lead, w.shape[1])
+
+
+def pack_params(w: jnp.ndarray, cfg: QuantConfig):
+    """One-time serving-side packing of a float weight into (uint8, scales)."""
+    from .quant import group_quantize
+
+    g = cfg.group_size if cfg.group_size else w.shape[0]
+    w_q, w_scale = group_quantize(w, g, bits=cfg.w_bits)
+    return pack_int4(w_q, axis=-1), w_scale
+
+
+def _qdense_packed(w, x, cfg: QuantConfig, bias):
+    out_dtype = x.dtype
+    packed, w_scale = w["packed"], w["scale"]
+    if cfg.backend in ("w4a4_packed", "int_sim", "pallas_int4"):
+        x2, lead = _flatten_batch(x.astype(jnp.float32))
+        a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)
+        a_q = quantize(x2, a_scale, bits=cfg.a_bits)
+        w_q = unpack_int4(packed, axis=-1)
+        acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+        y = acc.astype(jnp.float32) * a_scale * w_scale
+        y = y.reshape(*lead, w_q.shape[1])
+    else:                               # w4a16_packed: dequant + bf16 GEMM
+        w_q = unpack_int4(packed, axis=-1)
+        wf = (w_q.astype(jnp.float32) * w_scale).astype(x.dtype)
+        y = jnp.einsum("...k,kn->...n", x, wf)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y.astype(out_dtype)
+
+
+#: linear-weight leaf names eligible for serving-side packing (allowlist).
+PACKABLE_NAMES = frozenset({
+    "wq", "wk", "wv", "wo",                  # attention projections
+    "w_in", "w_gate", "w_out",               # FFN / MoE experts
+    "in_proj", "out_proj",                   # mamba
+    "in_x", "in_g", "w_a", "w_x", "out",     # rg-lru
+})
+
+
+def pack_weight_nd(w: jnp.ndarray, cfg: QuantConfig):
+    """Pack a [..., K, N] float weight: int4 per-output-channel (scale over
+    the K axis), nibbles packed along N.  Works for plain [K,N], layer-
+    stacked [L,K,N] and stacked experts [L,E,K,N]."""
+    scale = quant_scale(w, axis=-2, bits=cfg.w_bits)          # [..., 1, N]
+    q = quantize(w, scale, bits=cfg.w_bits)
+    return {"packed": pack_int4(q, axis=-1), "scale": scale}
+
+
+def pack_tree(params, cfg: QuantConfig, min_size: int = 1 << 12):
+    """Convert linear weights (by allowlisted name) into the packed serving
+    format.  Norms, biases, convs, embeddings, routers stay float."""
+    import jax
+
+    def maybe_pack(path, leaf):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+        packable = (
+            name in PACKABLE_NAMES
+            and leaf.ndim >= 2
+            and leaf.size >= min_size
+            and leaf.shape[-1] % 2 == 0
+            and leaf.dtype in (jnp.float32, jnp.bfloat16)
+        )
+        if not packable:
+            return leaf
+        return pack_weight_nd(leaf.astype(jnp.float32), cfg)
+
+    return jax.tree_util.tree_map_with_path(maybe_pack, params)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: low-bit multiplication.
+
+lut_mul4      -- the paper's LUT mechanism re-homed to VMEM (onehot/take)
+int4_matmul   -- W4A4 packed-nibble MXU matmul with fused dequant epilogue
+w4a16_matmul  -- weight-only int4 serving matmul with per-group scales
+ops           -- jit'd wrappers (+ pure-XLA equivalents for dry-runs)
+ref           -- pure-jnp oracles
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: W4A4 matmul — the paper's "dense 4-bit multiplier array"
+re-architected for the MXU.
+
+Hardware adaptation (DESIGN.md §2): on 7-series the win is LUT packing; on TPU
+the win is (a) int4 *storage* packing — two weights per byte, 4x fewer HBM
+bytes than bf16 — and (b) feeding the int8 MXU path (2x bf16 peak) with int32
+accumulation, which replaces the CARRY4 chains.  The kernel:
+
+  grid (M/bm, N/bn, K/bk), K innermost:
+    k == 0     : zero the accumulator tile
+    every k    : unpack the uint8 nibble tile -> int8 [bk, bn]; MXU dot with
+                 the int8 activation tile; accumulate (exact in f32 < 2^24)
+    k == K-1   : fuse the dequant epilogue  out *= a_scale[m] * w_scale[n]
+
+Block shapes default to MXU-aligned (128, 128, 512).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, w_ref, as_ref, ws_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]                                           # [bm, bk] int8
+    wp = w_ref[...]                                          # [bk, bn//2] uint8
+    lo = ((wp & 0xF) ^ 8).astype(jnp.int8) - 8               # sign-extend
+    hi = (((wp >> 4) & 0xF) ^ 8).astype(jnp.int8) - 8
+    w = jnp.stack([lo, hi], axis=-1).reshape(wp.shape[0], wp.shape[1] * 2)
+    acc = jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    o_ref[...] += acc.astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] * as_ref[...] * ws_ref[...]
+
+
+def _pad_to(x: jnp.ndarray, mult, axis: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def int4_matmul(
+    a_q: jnp.ndarray,          # [M, K] int8 holding int4 values
+    a_scale: jnp.ndarray,      # [M, 1] f32
+    w_packed: jnp.ndarray,     # [K, N//2] uint8 (packed along N)
+    w_scale: jnp.ndarray,      # [1, N] f32
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    M, K = a_q.shape
+    N = w_packed.shape[1] * 2
+    assert w_packed.shape[0] == K
+
+    a_q = _pad_to(_pad_to(a_q, bm, 0), bk, 1)
+    a_scale = _pad_to(a_scale, bm, 0)
+    w_packed = _pad_to(_pad_to(w_packed, bk, 0), bn // 2, 1)
+    w_scale = _pad_to(w_scale, bn, 1)
+    Mp, Kp = a_q.shape
+    Np = w_packed.shape[1] * 2
+    nk = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(a_q, w_packed, a_scale, w_scale)
+    return out[:M, :N]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: elementwise int4xint4 products via a VMEM product LUT.
+
+This is the *direct* TPU translation of the paper's mechanism (a precomputed
+truth table evaluated per operand pair).  The 256-entry int8 table lives in
+VMEM next to the operand tiles.  Two lookup strategies:
+
+  * ``onehot``  -- indices one-hot-encoded and contracted against the table
+    with the MXU (`jnp.dot`).  This is the systolic-array-native realisation
+    of "table lookup" and lowers on TPU unconditionally.
+  * ``take``    -- `jnp.take` dynamic gather (VPU path).
+
+Both are validated against `ref.mul4_ref`.  The roofline story (see
+EXPERIMENTS.md): a LUT lookup costs 256 MACs (onehot) or a serialized gather
+(take) per element versus 1 MAC for the native int8 multiply -- on TPU the
+paper's insight pays off in *packing + MXU scheduling* (see int4_matmul.py),
+not in table evaluation; we implement both to make that comparison concrete.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import make_product_lut
+
+# VPU-aligned tile: 8 sublanes x 128 lanes.
+DEFAULT_BLOCK = (256, 128)
+
+
+def _kernel_onehot(a_ref, b_ref, lut_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    idx = ((a & 0xF) << 4) | (b & 0xF)                       # [bm, bn] in [0,256)
+    oh = jax.nn.one_hot(idx, 256, dtype=jnp.float32)         # [bm, bn, 256]
+    lut = lut_ref[...].astype(jnp.float32)                   # [256]
+    prod = jax.lax.dot_general(
+        oh.reshape(-1, 256), lut[:, None],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = prod.reshape(idx.shape).astype(jnp.int8)
+
+
+def _kernel_take(a_ref, b_ref, lut_ref, o_ref):
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    idx = ((a & 0xF) << 4) | (b & 0xF)
+    o_ref[...] = jnp.take(lut_ref[...], idx.reshape(-1)).reshape(idx.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("strategy", "block", "interpret"))
+def lut_mul4(
+    a_q: jnp.ndarray,
+    b_q: jnp.ndarray,
+    strategy: str = "onehot",
+    block: tuple = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Elementwise signed-int4 product of int8-valued tensors -> int8.
+
+    Inputs are flattened to 2D tiles; arbitrary leading shapes supported.
+    """
+    assert a_q.shape == b_q.shape
+    shape = a_q.shape
+    n = 1
+    for s in shape:
+        n *= s
+    bm, bn = block
+    cols = bn
+    rows = -(-n // cols)
+    rows_padded = -(-rows // bm) * bm
+    a2 = jnp.zeros((rows_padded * cols,), jnp.int8).at[:n].set(a_q.reshape(-1))
+    b2 = jnp.zeros((rows_padded * cols,), jnp.int8).at[:n].set(b_q.reshape(-1))
+    a2 = a2.reshape(rows_padded, cols)
+    b2 = b2.reshape(rows_padded, cols)
+    lut = jnp.asarray(make_product_lut())
+
+    kernel = _kernel_onehot if strategy == "onehot" else _kernel_take
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows_padded // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+            pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_padded, cols), jnp.int8),
+        interpret=interpret,
+    )(a2, b2, lut)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,63 @@
+"""Public jit'd entry points for the kernels, with CPU-interpret fallback.
+
+On a real TPU runtime, pass ``interpret=False`` (or set
+``REPRO_PALLAS_INTERPRET=0``) and the kernels lower through Mosaic; in this
+container everything is validated through the Pallas interpreter.  The `xla_*`
+functions are the pure-XLA equivalents used inside full-model dry-runs (Pallas
+TPU kernels cannot lower on the CPU backend).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from . import ref
+from .int4_matmul import int4_matmul as _int4_matmul
+from .lut_mul4 import lut_mul4 as _lut_mul4
+from .w4a16_matmul import w4a16_matmul as _w4a16_matmul
+
+
+def _default_interpret(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def mul4(a_q, b_q, strategy: str = "onehot", interpret: Optional[bool] = None):
+    """Elementwise exact int4 product (Pallas)."""
+    return _lut_mul4(a_q, b_q, strategy=strategy,
+                     interpret=_default_interpret(interpret))
+
+
+def int4_matmul(a_q, a_scale, w_packed, w_scale,
+                interpret: Optional[bool] = None, **blocks):
+    """W4A4 matmul with fused dequant epilogue (Pallas)."""
+    return _int4_matmul(a_q, a_scale, w_packed, w_scale,
+                        interpret=_default_interpret(interpret), **blocks)
+
+
+def w4a16_matmul(x, w_packed, w_scale, group_size: int,
+                 interpret: Optional[bool] = None, **blocks):
+    """Weight-only int4 matmul with per-group dequant (Pallas)."""
+    return _w4a16_matmul(x, w_packed, w_scale, group_size,
+                         interpret=_default_interpret(interpret), **blocks)
+
+
+# --- pure-XLA equivalents (identical math; used in multi-device dry-runs) ---
+
+def xla_int4_matmul(a_q, a_scale, w_packed, w_scale):
+    return ref.int4_matmul_ref(a_q, a_scale, w_packed, w_scale)
+
+
+def xla_w4a16_matmul(x, w_packed, w_scale, group_size: int):
+    return ref.w4a16_matmul_ref(x, w_packed, w_scale, group_size)
+
+
+def xla_mul4(a_q, b_q):
+    return ref.mul4_ref(a_q, b_q)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every kernel in `repro.kernels`.
+
+These are the ground-truth semantics the Pallas kernels (and the FPGA netlist
+simulation) are tested against with `assert_allclose` across shape/dtype
+sweeps.  All integer paths are exact, so integer comparisons use equality.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.quant import unpack_int4
+
+
+def make_product_lut() -> np.ndarray:
+    """256-entry signed-int4 product table: LUT[(a&0xF)<<4 | (b&0xF)] = a*b.
+
+    This is the TPU re-homing of the paper's LUT-based multiplier: the full
+    4x4-bit product space precomputed into a table small enough to live in
+    VMEM (256 bytes), indexed instead of recomputed.
+    """
+    t = np.zeros(256, dtype=np.int8)
+    for a in range(16):
+        sa = a - 16 if a >= 8 else a
+        for b in range(16):
+            sb = b - 16 if b >= 8 else b
+            t[(a << 4) | b] = sa * sb
+    return t
+
+
+def mul4_ref(a_q: jnp.ndarray, b_q: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise exact int4*int4 -> int8 product (values in [-56, 64])."""
+    return (a_q.astype(jnp.int32) * b_q.astype(jnp.int32)).astype(jnp.int8)
+
+
+def int4_matmul_ref(
+    a_q: jnp.ndarray,          # [M, K] int8 holding int4 values
+    a_scale: jnp.ndarray,      # [M, 1] f32
+    w_packed: jnp.ndarray,     # [K, N//2] uint8 (two int4 per byte, packed on N)
+    w_scale: jnp.ndarray,      # [1, N] f32
+) -> jnp.ndarray:
+    """W4A4 matmul: integer dot + per-row/per-col scale epilogue -> f32."""
+    w_q = unpack_int4(w_packed, axis=-1)                     # [K, N] int8
+    acc = jnp.dot(
+        a_q.astype(jnp.int8), w_q, preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * a_scale * w_scale
+
+
+def w4a16_matmul_ref(
+    x: jnp.ndarray,            # [M, K] bf16/f32
+    w_packed: jnp.ndarray,     # [K, N//2] uint8
+    w_scale: jnp.ndarray,      # [K//G, 1, N] f32 (or [1, N] per-channel)
+    group_size: int,
+) -> jnp.ndarray:
+    """Weight-only int4 serving matmul: dequantize then bf16 GEMM -> f32."""
+    w_q = unpack_int4(w_packed, axis=-1)                     # [K, N] int8
+    K, N = w_q.shape
+    if w_scale.ndim == 2:
+        w = w_q.astype(jnp.float32) * w_scale
+    else:
+        wg = w_q.reshape(K // group_size, group_size, N).astype(jnp.float32)
+        w = (wg * w_scale).reshape(K, N)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)

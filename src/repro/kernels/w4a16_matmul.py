@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: weight-only int4 serving matmul (W4A16).
+
+bf16 activations x packed-int4 weights with per-group scales, dequantized
+tile-by-tile in VMEM and contracted on the bf16 MXU with f32 accumulation.
+This is the AWQ/GPTQ-shaped deployment mode of the paper's technique: weight
+bytes drop 4x (the "more multipliers per unit area" argument) while activation
+precision is preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .int4_matmul import _pad_to
+
+
+def _kernel(x_ref, w_ref, ws_ref, o_ref, *, nk: int, groups_per_bk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                           # [bm, bk] bf16
+    wp = w_ref[...]                                          # [bk, bn//2] uint8
+    lo = ((wp & 0xF) ^ 8).astype(jnp.int8) - 8
+    hi = (((wp >> 4) & 0xF) ^ 8).astype(jnp.int8) - 8
+    w_q = jnp.stack([lo, hi], axis=-1).reshape(wp.shape[0], wp.shape[1] * 2)
+    bk, bn = w_q.shape
+    scale = ws_ref[...]                                      # [groups_per_bk, 1, bn]
+    w = (
+        w_q.reshape(groups_per_bk, bk // groups_per_bk, bn).astype(jnp.float32)
+        * scale
+    ).reshape(bk, bn)
+    acc = jax.lax.dot_general(
+        x.astype(jnp.float32), w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group_size", "bm", "bn", "bk", "interpret")
+)
+def w4a16_matmul(
+    x: jnp.ndarray,            # [M, K] bf16/f32
+    w_packed: jnp.ndarray,     # [K, N//2] uint8
+    w_scale: jnp.ndarray,      # [K//G, 1, N] f32
+    group_size: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    M, K = x.shape
+    N = w_packed.shape[1] * 2
+    assert K % group_size == 0 and bk % group_size == 0, (K, bk, group_size)
+    if w_scale.ndim == 2:                                    # per-channel
+        w_scale = w_scale.reshape(1, 1, N)
+        group_size = K
+        assert bk % K == 0 or K % bk == 0
+        gpb = max(1, bk // K)
+    else:
+        gpb = bk // group_size
+
+    x = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    w_packed = _pad_to(_pad_to(w_packed, bk, 0), bn // 2, 1)
+    w_scale = _pad_to(_pad_to(w_scale, gpb, 0), bn, 2)
+    Mp, Kp = x.shape
+    Np = w_packed.shape[1] * 2
+    nk = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, groups_per_bk=gpb),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((gpb, 1, bn), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, w_scale)
+    return out[:M, :N]

@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, trainer, server, multi-pod dry-run,
+roofline analysis."""

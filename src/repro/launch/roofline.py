@@ -1,0 +1,264 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = FLOPs / (PEAK_FLOPS)            per device
+    memory     = bytes_accessed / HBM_BW         per device
+    collective = collective_operand_bytes / ICI_BW_PER_LINK   per device
+
+Methodology (full derivation in EXPERIMENTS.md):
+  * XLA's cost_analysis counts while-loop bodies ONCE, so the production
+    (scan-over-layers) compile is used only for memory_analysis;
+  * cost/collective terms come from *unrolled probe* lowerings at 2 and 4
+    pattern-repeats, linearly extrapolated to the full depth:
+        total(R) = c(2) + (c(4) - c(2)) / 2 * (R - 2)
+    The probes unroll layers, materialize attention scores and skip loss
+    chunking => their HLO contains no loops and every op is counted exactly.
+  * collective bytes are parsed from the probe's post-SPMD HLO: for each
+    collective op we sum its *operand* sizes (name -> shape map built from
+    the whole module), classify by kind, and split intra-pod vs cross-pod
+    from replica_groups (pod-major device order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# ----------------------------------------------------- hardware constants --
+PEAK_FLOPS_BF16 = 197e12        # per chip, TPU v5e
+PEAK_FLOPS_INT8 = 394e12        # int8 MXU path (2x bf16)
+HBM_BW = 819e9                  # B/s per chip
+ICI_BW_PER_LINK = 50e9          # B/s per link (conservative single-link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?)\s+"
+                        r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+# iota form: replica_groups=[ngroups,gsize]<=[d0,d1,..]T(p0,p1,..)  (T opt.)
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def _iota_groups_cross_pod(m, pod_size: int) -> bool:
+    """Decode an iota replica-group spec; True if any group spans pods."""
+    import numpy as np
+
+    ngroups, gsize = int(m.group(1)), int(m.group(2))
+    dims = [int(x) for x in m.group(3).split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        perm = [int(x) for x in m.group(4).split(",")]
+        ids = ids.transpose(perm)
+    groups = ids.reshape(ngroups, gsize)
+    return bool(((groups.max(1) // pod_size) != (groups.min(1) // pod_size)).any())
+
+
+def _type_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (sums tuple components)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    cross_pod_bytes: float
+    count: int
+
+    def total(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, pod_size: Optional[int] = None
+                      ) -> CollectiveStats:
+    """Sum collective operand bytes from post-SPMD HLO text."""
+    name_to_bytes: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_DEF_RE.match(line)
+        if m:
+            name_to_bytes[m.group(1)] = _type_bytes(m.group(2))
+
+    bytes_by_kind = {k: 0.0 for k in _COLLECTIVES}
+    cross_pod = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _OP_DEF_RE.match(line)
+        if not m:
+            continue
+        opname = m.group(3)
+        kind = None
+        for k in _COLLECTIVES:
+            if opname == k or opname == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        count += 1
+        # operands: %refs inside the first (...) after the op name
+        call = line[line.index(opname + "("):]
+        depth = 0
+        arglist = ""
+        for ch in call[len(opname):]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                arglist += ch
+        op_bytes = sum(
+            name_to_bytes.get(r, 0.0) for r in _OPERAND_RE.findall(arglist)
+        )
+        if op_bytes == 0.0:
+            # fall back to result bytes (e.g. operands are literals)
+            op_bytes = _type_bytes(m.group(2))
+        bytes_by_kind[kind] += op_bytes
+        if pod_size:
+            g = _GROUPS_RE.search(line)
+            if g:
+                for grp in re.findall(r"\{([^}]*)\}", g.group(1)):
+                    ids = [int(x) for x in grp.split(",") if x.strip()]
+                    if ids and (max(ids) // pod_size) != (min(ids) // pod_size):
+                        cross_pod += op_bytes
+                        break
+            else:
+                gi = _GROUPS_IOTA_RE.search(line)
+                if gi and _iota_groups_cross_pod(gi, pod_size):
+                    cross_pod += op_bytes
+    return CollectiveStats(bytes_by_kind, cross_pod, count)
+
+
+# ---------------------------------------------------------- model flops ----
+def model_params(cfg) -> Tuple[int, int]:
+    """(total params N, active-per-token params N_active), analytic."""
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.vocab_padded
+    def attn_p():
+        return D * cfg.n_heads * cfg.hd * 2 + D * cfg.n_kv_heads * cfg.hd * 2
+
+    def ffn_p(F):
+        mult = 3 if cfg.ffn_type == "swiglu" else 2
+        return mult * D * F
+
+    total = active = 0
+    counts = {"A": 0, "M": 0, "R": 0}
+    pattern_full = list(cfg.pattern) * cfg.n_repeats + list(cfg.tail)
+    for bt in pattern_full:
+        counts[bt] += 1
+    for bt, n in counts.items():
+        if n == 0:
+            continue
+        if bt == "A":
+            per = attn_p()
+            per_active = per
+            if cfg.n_experts:
+                e = ffn_p(cfg.d_ff_expert or cfg.d_ff)
+                per += cfg.n_experts * e + D * cfg.n_experts
+                per_active += cfg.top_k * e
+                if cfg.shared_expert:
+                    per += e
+                    per_active += e
+                if cfg.moe_dense_ff:
+                    de = ffn_p(cfg.moe_dense_ff)
+                    per += de
+                    per_active += de
+            elif cfg.d_ff:
+                per += ffn_p(cfg.d_ff)
+                per_active = per
+        elif bt == "M":
+            di, N, H, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_groups
+            per = D * (2 * di + 2 * G * N + H) + di * D
+            per_active = per
+        else:  # R
+            W = cfg.lru_width or D
+            per = 2 * D * W + 2 * W * W + W * D
+            per_active = per
+            if cfg.d_ff:
+                per += ffn_p(cfg.d_ff)
+                per_active += ffn_p(cfg.d_ff)
+        total += per * n
+        active += per_active * n
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    total += emb
+    active += emb
+    return int(total), int(active)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell: 6*N*tokens (train, incl. bwd) or
+    2*N_active*tokens (inference), plus causal-attention score FLOPs."""
+    n_total, n_active = model_params(cfg)
+    B, S = shape.batch, shape.seq
+    n_attn_layers = sum(
+        1 for bt in (list(cfg.pattern) * cfg.n_repeats + list(cfg.tail))
+        if bt == "A"
+    )
+    if shape.kind == "train":
+        tokens = B * S
+        gemm = 6 * n_active * tokens
+        ctx = min(S, cfg.local_window) if cfg.local_window else S
+        attn = 3 * 2 * 2 * B * S * ctx / 2 * cfg.n_heads * cfg.hd * n_attn_layers
+        return gemm + attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        gemm = 2 * n_active * tokens
+        ctx = min(S, cfg.local_window) if cfg.local_window else S
+        attn = 2 * 2 * B * S * ctx / 2 * cfg.n_heads * cfg.hd * n_attn_layers
+        return gemm + attn
+    # decode: one token against a cache of length S
+    tokens = B
+    gemm = 2 * n_active * tokens
+    ctx = min(S, cfg.local_window) if cfg.local_window else S
+    attn = 2 * 2 * B * ctx * cfg.n_heads * cfg.hd * n_attn_layers
+    return gemm + attn
+
+
+# ------------------------------------------------------------------ terms --
+def roofline_terms(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    coll_bytes_per_dev: float,
+    *,
+    int8_fraction: float = 0.0,
+) -> Dict[str, float]:
+    peak = PEAK_FLOPS_BF16 * (1 - int8_fraction) + PEAK_FLOPS_INT8 * int8_fraction
+    t_c = flops_per_dev / peak
+    t_m = bytes_per_dev / HBM_BW
+    t_x = coll_bytes_per_dev / ICI_BW_PER_LINK
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "bound": dom,
+        "step_s_lower_bound": max(t_c, t_m, t_x),
+    }

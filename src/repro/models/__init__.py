@@ -1,0 +1,9 @@
+"""Model zoo: block library + decoder LM assembly for all assigned archs."""
+from .transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_caches,
+    init_model,
+    lm_loss,
+    prefill,
+)

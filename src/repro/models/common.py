@@ -1,0 +1,75 @@
+"""Shared model components: norms, rotary embeddings (RoPE / M-RoPE),
+initializers and the activation-sharding helper."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def normal_init(key, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(max(fan, 1)))
+
+
+# ------------------------------------------------------------------- RoPE --
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(
+    x: jnp.ndarray,                 # [B, S, H, hd]
+    positions: jnp.ndarray,         # [B, S] int32
+    theta: float,
+) -> jnp.ndarray:
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,                 # [B, S, H, hd]
+    positions: jnp.ndarray,         # [3, B, S] int32 (t, h, w streams)
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: rotary frequency slots split into three
+    sections driven by separate (temporal, height, width) position ids."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # [hd/2]
+    assert sum(sections) == hd // 2, (sections, hd)
+    ang_parts = []
+    start = 0
+    for s, sec in enumerate(sections):
+        f = freqs[start:start + sec]
+        ang_parts.append(positions[s][..., None].astype(jnp.float32) * f)
+        start += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)                  # [B, S, hd/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_embed(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Non-learned absolute positional embedding (musicgen-style)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [B, S, half]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

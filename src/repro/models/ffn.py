@@ -1,0 +1,40 @@
+"""Dense FFN blocks: SwiGLU (llama-family) and GELU (starcoder2/musicgen),
+all projections through the paper's quantized linear."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Runtime
+from repro.core.qlinear import qdense
+from repro.distributed.sharding import shard
+from .common import normal_init
+
+
+def init_ffn(key, cfg: ArchConfig, d_ff: int = 0) -> Dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": normal_init(ks[0], (D, F)),
+         "w_out": normal_init(ks[1], (F, D), fan_in=F)}
+    if cfg.ffn_type == "swiglu":
+        p["w_gate"] = normal_init(ks[2], (D, F))
+    if cfg.mlp_bias:
+        p["b_in"] = jnp.zeros((F,))
+        p["b_out"] = jnp.zeros((D,))
+    return p
+
+
+def apply_ffn(params: Dict, x: jnp.ndarray, cfg: ArchConfig, rt: Runtime) -> jnp.ndarray:
+    qc = rt.quant_cfg(cfg)
+    h = qdense(params["w_in"], x, qc, params.get("b_in"))
+    if cfg.ffn_type == "swiglu":
+        g = qdense(params["w_gate"], x, qc)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "act_btf")
+    y = qdense(params["w_out"], h, qc, params.get("b_out"))
+    return shard(y, "act_btd")

@@ -1,0 +1,97 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU gated linear
+recurrence, computed with `lax.associative_scan` (log-depth, loop-free HLO).
+
+Block layout follows Griffin (arXiv:2402.19427): two input branches
+(linear->GeLU gate; linear->conv1d->RG-LRU), elementwise merge, output
+projection.  Gate projections are full matrices (GEMM-heavy; quantized with
+the paper's technique).  The recurrence itself runs in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Runtime
+from repro.core.qlinear import qdense
+from repro.distributed.sharding import shard
+from .common import normal_init
+from .ssm import _causal_conv
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def init_rglru(key, cfg: ArchConfig) -> Dict:
+    D, W, K = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": normal_init(ks[0], (D, W)),
+        "in_g": normal_init(ks[1], (D, W)),
+        "conv_w": normal_init(ks[2], (K, W), fan_in=K),
+        "conv_b": jnp.zeros((W,)),
+        "w_a": normal_init(ks[3], (W, W)),
+        "b_a": jnp.zeros((W,)),
+        "w_x": normal_init(ks[4], (W, W)),
+        "b_x": jnp.zeros((W,)),
+        # Lambda init so a^c in ~[0.9, 0.999] (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, W)) / _C
+        )),
+        "out": normal_init(ks[5], (W, D), fan_in=W),
+    }
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int) -> Dict:
+    W = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, W), jnp.float32),
+        "h": jnp.zeros((batch, W), jnp.float32),
+    }
+
+
+def apply_rglru(
+    params: Dict,
+    x: jnp.ndarray,                   # [B, S, D]
+    cfg: ArchConfig,
+    rt: Runtime,
+    cache: Optional[Dict] = None,
+    update_cache: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    qc = rt.quant_cfg(cfg)
+    B, S, D = x.shape
+
+    g = jax.nn.gelu(qdense(params["in_g"], x, qc))
+    u = qdense(params["in_x"], x, qc)
+    u = shard(u, "act_btf")
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"], conv_state)
+
+    r = jax.nn.sigmoid(qdense(params["w_a"], u, qc, params["b_a"])).astype(jnp.float32)
+    i = jax.nn.sigmoid(qdense(params["w_x"], u, qc, params["b_x"])).astype(jnp.float32)
+
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r            # [B,S,W] <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * i * u.astype(jnp.float32)
+
+    if cache is not None and S == 1:
+        h = a[:, 0] * cache["h"] + gated[:, 0]                  # [B, W]
+        hs = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        h0 = cache["h"] if cache is not None else jnp.zeros((B, u.shape[-1]), jnp.float32)
+        # inject initial state into the first step's additive term
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+        _, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        new_cache = {"conv": new_conv, "h": hs[:, -1]} if update_cache else None
+
+    y = hs.astype(x.dtype) * g
+    out = qdense(params["out"], y, qc)
+    return shard(out, "act_btd"), new_cache

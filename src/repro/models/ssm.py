@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked and scan-free.
+
+The inter-chunk recurrence uses `lax.associative_scan` (log-depth, fully
+materialized in HLO) instead of a sequential `lax.scan`, so the dry-run
+cost analysis sees every FLOP and the temporal mixer contains no while
+loops (see EXPERIMENTS.md §Roofline methodology).
+
+Projections (`in_proj`, `out_proj`) go through the paper's quantized linear;
+the recurrent state itself stays fp32 (DESIGN.md §4 applicability note).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Runtime
+from repro.core.qlinear import qdense
+from repro.distributed.sharding import shard
+from .common import normal_init, rms_norm
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba(key, cfg: ArchConfig) -> Dict:
+    D, di, N, H, G = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_groups)
+    cd = conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": normal_init(ks[0], (D, 2 * di + 2 * G * N + H)),
+        "conv_w": normal_init(ks[1], (cfg.ssm_conv, cd), fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((cd,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))),
+        "norm_w": jnp.ones((di,)),
+        "out_proj": normal_init(ks[2], (di, D), fan_in=di),
+    }
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int) -> Dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim(cfg)), jnp.float32),
+        "ssd": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+    }
+
+
+def _causal_conv(xBC, w, b, conv_state=None):
+    """Depthwise causal conv, width K, via K shifted adds (loop-free).
+    xBC [B, S, C]; w [K, C]; conv_state [B, K-1, C] or None."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    full = jnp.concatenate([pad, xBC], axis=1)                  # [B, S+K-1, C]
+    S = xBC.shape[1]
+    y = sum(full[:, k:k + S] * w[k][None, None, :] for k in range(K))
+    new_state = full[:, full.shape[1] - (K - 1):]
+    return y + b[None, None, :], new_state.astype(jnp.float32)
+
+
+def apply_mamba(
+    params: Dict,
+    x: jnp.ndarray,                   # [B, S, D]
+    cfg: ArchConfig,
+    rt: Runtime,
+    cache: Optional[Dict] = None,
+    update_cache: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, D = x.shape
+    di, N, H, P_, G = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_headdim, cfg.ssm_groups)
+    qc = rt.quant_cfg(cfg)
+
+    proj = qdense(params["in_proj"], x, qc)
+    z = proj[..., :di]
+    xBC = proj[..., di:di + conv_dim(cfg)]
+    dt = proj[..., di + conv_dim(cfg):]
+    xBC = shard(xBC, "act_btf")
+
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xBC = jax.nn.silu(xBC)
+
+    xs = xBC[..., :di].reshape(B, S, H, P_)
+    Bm = xBC[..., di:di + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., di + G * N:].reshape(B, S, G, N)
+    rep = H // G
+    Bm = jnp.repeat(Bm, rep, axis=2)                            # [B, S, H, N]
+    Cm = jnp.repeat(Cm, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(params["A_log"])                               # [H]
+    dA = dt * A                                                 # [B,S,H] <= 0
+
+    if cache is not None and S == 1:
+        # ---- decode: one recurrence step -------------------------------
+        h = cache["ssd"]                                        # [B,H,P,N] f32
+        dBx = jnp.einsum(
+            "bh,bhn,bhp->bhpn",
+            dt[:, 0], Bm[:, 0].astype(jnp.float32), xs[:, 0].astype(jnp.float32),
+        )
+        h = jnp.exp(dA[:, 0])[:, :, None, None] * h + dBx
+        y = jnp.einsum("bhn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y + params["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)                          # [B,1,H,P]
+        new_cache = {"conv": new_conv, "ssd": h}
+    else:
+        # ---- chunked SSD ------------------------------------------------
+        Q = min(cfg.ssm_chunk, S)
+        pad = (-S) % Q
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Sp = S + pad
+        nc = Sp // Q
+        shp = lambda t, tail: t.reshape((B, nc, Q) + tail)
+        xs_c = shp(xs, (H, P_)).astype(jnp.float32)
+        B_c = shp(Bm, (H, N)).astype(jnp.float32)
+        C_c = shp(Cm, (H, N)).astype(jnp.float32)
+        dA_c = shp(dA, (H,))
+        dt_c = shp(dt, (H,))
+
+        l = jnp.cumsum(dA_c, axis=2)                            # [B,nc,Q,H]
+        l_last = l[:, :, -1:, :]
+        xdt = xs_c * dt_c[..., None]
+
+        # intra-chunk (quadratic within chunk, masked causal).  Mask BEFORE
+        # exp: the j>i region has l_i - l_j >> 0 and exp overflows to inf
+        # (inf * 0 = NaN) if masked after.
+        diff = l[:, :, :, None] - l[:, :, None, :, :]            # [B,nc,Q,Q,H]
+        tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))[None, None, :, :, None]
+        decay = jnp.exp(jnp.where(tri, diff, -jnp.inf))
+        scores = jnp.einsum("bcqhn,bckhn->bcqkh", C_c, B_c) * decay
+        y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xdt)
+
+        # chunk summaries + inter-chunk associative scan
+        w = jnp.exp(l_last - l)                                 # [B,nc,Q,H]
+        S_c = jnp.einsum("bcqhn,bcqhp->bchpn", B_c * w[..., None], xdt)
+        d_c = jnp.exp(l_last[:, :, 0, :])                       # [B,nc,H]
+
+        def combine(a, b):
+            da, sa = a
+            db, sb = b
+            return da * db, sa * db[..., None, None] + sb
+
+        dcum, scum = jax.lax.associative_scan(combine, (d_c, S_c), axis=1)
+        h0 = (cache["ssd"] if cache is not None
+              else jnp.zeros((B, H, P_, N), jnp.float32))
+        h_after = scum + h0[:, None] * dcum[..., None, None]
+        h_before = jnp.concatenate([h0[:, None], h_after[:, :-1]], axis=1)
+
+        y_inter = jnp.einsum(
+            "bcqhn,bchpn->bcqhp", C_c * jnp.exp(l)[..., None], h_before
+        )
+        y = y_intra + y_inter + params["D"][None, None, None, :, None] * xs_c
+        y = y.reshape(B, Sp, H, P_)[:, :S].astype(x.dtype)
+        new_cache = None
+        if update_cache:
+            new_cache = {"conv": new_conv, "ssd": h_after[:, -1]}
+
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = qdense(params["out_proj"], y, qc)
+    return shard(out, "act_btd"), new_cache

@@ -1,0 +1,69 @@
+"""AdamW with decoupled weight decay and global-norm clipping (pure pytrees,
+fp32 states).  States mirror the parameter tree, so the ZeRO-style sharding
+rules in `distributed.sharding` apply to them unchanged."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(  # noqa: E731
+        lambda x: jnp.zeros(x.shape, jnp.float32), p
+    )
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(
+    params,
+    grads,
+    opt_state: Dict[str, Any],
+    lr: jnp.ndarray,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    step = opt_state["step"] + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        update = (mu / b1c) / (jnp.sqrt(nu / b2c) + eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (update + weight_decay * p32)
+        return p32.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    return (
+        jax.tree.unflatten(tdef, new_p),
+        {"mu": jax.tree.unflatten(tdef, new_mu),
+         "nu": jax.tree.unflatten(tdef, new_nu),
+         "step": step},
+        {"grad_norm": gn},
+    )

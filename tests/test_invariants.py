@@ -1,0 +1,73 @@
+"""Property tests on system invariants (hypothesis): implementation knobs
+(chunk sizes, attention impl, scan vs unroll) must never change the math."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import Runtime, get_config
+from repro.models import init_model
+from repro.models.transformer import forward
+
+
+def _logits_for(cfg, rt, params, toks):
+    h, _, _ = forward(params, toks, cfg, rt, return_hidden=True)
+    return np.asarray(h, np.float32)
+
+
+@given(st.sampled_from([4, 8, 16, 32]))
+@settings(max_examples=4, deadline=None)
+def test_ssd_chunk_size_invariance(chunk):
+    """Mamba-2 SSD output must not depend on the chunk length."""
+    cfg = get_config("mamba2-130m").reduced()
+    cfg_c = dataclasses.replace(cfg, ssm_chunk=chunk)
+    cfg_ref = dataclasses.replace(cfg, ssm_chunk=32)   # single chunk (S=32)
+    rt = Runtime(loss_chunk=0, compute_dtype="float32", quant_backend="float")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    np.testing.assert_allclose(
+        _logits_for(cfg_c, rt, params, toks),
+        _logits_for(cfg_ref, rt, params, toks),
+        rtol=2e-4, atol=2e-5,
+    )
+
+
+@given(st.sampled_from([4, 8, 12, 64]))
+@settings(max_examples=4, deadline=None)
+def test_attention_chunk_invariance(chunk_q):
+    """Chunked attention == full attention for any query-chunk size."""
+    cfg = get_config("qwen3-4b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
+    rt_full = Runtime(attn_impl="full", loss_chunk=0,
+                      compute_dtype="float32", quant_backend="float")
+    rt_chunk = Runtime(attn_impl="chunked", attn_chunk_q=chunk_q,
+                       loss_chunk=0, compute_dtype="float32",
+                       quant_backend="float")
+    np.testing.assert_allclose(
+        _logits_for(cfg, rt_chunk, params, toks),
+        _logits_for(cfg, rt_full, params, toks),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@given(st.sampled_from(["musicgen-large", "recurrentgemma-9b"]))
+@settings(max_examples=2, deadline=None)
+def test_window_mask_only_limits_past(arch):
+    """A local window >= S equals global attention; < S changes outputs."""
+    cfg = get_config(arch).reduced()
+    if not cfg.local_window:
+        cfg = dataclasses.replace(cfg, local_window=16)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0, cfg.vocab)
+    rt = Runtime(loss_chunk=0, compute_dtype="float32", quant_backend="float")
+    big = dataclasses.replace(cfg, local_window=1024)
+    none = dataclasses.replace(cfg, local_window=0)
+    np.testing.assert_allclose(
+        _logits_for(big, rt, params, toks),
+        _logits_for(none, rt, params, toks),
+        rtol=1e-5, atol=1e-6,
+    )

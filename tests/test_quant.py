@@ -1,0 +1,111 @@
+"""Quantization substrate: invariants (hypothesis property tests) + qdense
+backend agreement, including the end-to-end netlist oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qlinear import QuantConfig, qdense
+from repro.core.quant import (
+    dequantize,
+    fake_quant,
+    group_quantize,
+    pack_int4,
+    quant_scale,
+    quantize,
+    unpack_int4,
+)
+
+
+# ------------------------------------------------------ property: quantize --
+@given(
+    st.lists(st.floats(-100, 100, allow_nan=False, width=32), min_size=4,
+             max_size=64).map(np.asarray),
+    st.sampled_from([4, 8]),
+)
+@settings(max_examples=50, deadline=None)
+def test_quant_roundtrip_error_bounded(vals, bits):
+    """|x - dq(q(x))| <= scale/2 for values inside the clip range."""
+    x = jnp.asarray(vals, jnp.float32)
+    scale = quant_scale(x, axis=None, bits=bits)
+    q = quantize(x, scale, bits=bits)
+    err = jnp.abs(dequantize(q, scale) - x)
+    assert float(jnp.max(err)) <= float(scale) / 2 + 1e-6
+
+
+@given(st.integers(-8, 7), st.integers(-8, 7))
+@settings(max_examples=64, deadline=None)
+def test_netlist_product_matches_int_mul(a, b):
+    """Property: the paper's circuit multiplies any signed int4 pair exactly."""
+    from repro.core import build_proposed_mult4
+    from repro.core.quant import to_unsigned_mag
+
+    nl = build_proposed_mult4()
+    qa, qb = jnp.int8(a), jnp.int8(b)
+    ma, sa = to_unsigned_mag(qa)
+    mb, sb = to_unsigned_mag(qb)
+    assert int(nl(ma, mb)) * int(sa) * int(sb) == a * b
+
+
+@given(st.integers(1, 8).map(lambda n: 2 * n))
+@settings(max_examples=10, deadline=None)
+def test_pack_unpack_roundtrip_property(n):
+    rng = np.random.default_rng(n)
+    q = jnp.asarray(rng.integers(-8, 8, size=(n, n), dtype=np.int8))
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(q))), np.asarray(q))
+
+
+# ------------------------------------------------------------- fake quant --
+def test_fake_quant_ste_gradient_is_identity_inside_range():
+    x = jnp.linspace(-1.0, 1.0, 32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, axis=None, bits=4)))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones(32), rtol=1e-6)
+
+
+def test_group_quantize_shapes():
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((256, 16), dtype=np.float32))
+    q, s = group_quantize(w, 64)
+    assert q.shape == (256, 16) and s.shape == (4, 1, 16)
+
+
+# -------------------------------------------------------- qdense backends --
+@pytest.mark.parametrize("backend", ["int_sim", "pallas_int4"])
+def test_qdense_int_backends_agree(backend):
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.standard_normal((64, 48), dtype=np.float32)) * 0.1
+    x = jnp.asarray(rng.standard_normal((5, 64), dtype=np.float32))
+    y_sim = qdense(w, x, QuantConfig(backend="int_sim"))
+    y = qdense(w, x, QuantConfig(backend=backend))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_sim), rtol=1e-5, atol=1e-5)
+
+
+def test_qdense_netlist_oracle_matches_int_sim():
+    """The full FPGA-circuit GEMM equals the int_sim GEMM bit-for-bit."""
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.standard_normal((16, 8), dtype=np.float32))
+    x = jnp.asarray(rng.standard_normal((3, 16), dtype=np.float32))
+    y_net = qdense(w, x, QuantConfig(backend="netlist"))
+    y_sim = qdense(w, x, QuantConfig(backend="int_sim"))
+    np.testing.assert_allclose(np.asarray(y_net), np.asarray(y_sim), rtol=1e-6)
+
+
+def test_qdense_quant_error_small_vs_float():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((128, 64), dtype=np.float32)) * 0.05
+    x = jnp.asarray(rng.standard_normal((16, 128), dtype=np.float32))
+    y_f = qdense(w, x, QuantConfig(backend="float"))
+    for backend in ("fake_quant", "int_sim", "w4a16"):
+        y_q = qdense(w, x, QuantConfig(backend=backend))
+        rel = float(jnp.linalg.norm(y_q - y_f) / jnp.linalg.norm(y_f))
+        assert rel < 0.25, (backend, rel)   # int4 error band
+
+
+def test_qdense_bias_and_dtype():
+    w = jnp.ones((8, 4), jnp.float32)
+    x = jnp.ones((2, 8), jnp.bfloat16)
+    b = jnp.arange(4, dtype=jnp.float32)
+    y = qdense(w, x, QuantConfig(backend="float"), bias=b)
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y, np.float32)[0], 8.0 + np.arange(4))

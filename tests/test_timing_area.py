@@ -1,0 +1,59 @@
+"""Paper Tables II & III: resource counts and CPD orderings from our models."""
+
+import pytest
+
+from repro.core import (
+    PUBLISHED_ROWS,
+    analyze,
+    build_acc_mult4,
+    build_lm_mult4,
+    build_proposed_mult4,
+    resources,
+)
+from repro.core.pipeline_mult import pipelined_report
+
+
+def test_table2_proposed_resources():
+    r = resources(build_proposed_mult4())
+    assert r["luts"] == 11 and r["carry4"] == 2          # paper Table II row 1
+
+
+def test_table2_lm_resources():
+    r = resources(build_lm_mult4())
+    assert r["luts"] == 12 and r["carry4"] == 1          # paper Table II row 2
+
+
+def test_table2_proposed_is_minimum():
+    ours = resources(build_proposed_mult4())["luts"]
+    for name, row in PUBLISHED_ROWS.items():
+        if name != "proposed":
+            assert ours < row["luts"], name
+
+
+def test_table3_proposed_cpd_matches_paper():
+    t = analyze(build_proposed_mult4())
+    assert abs(t["cpd"] - 2.750) < 1e-6                   # calibrated
+    assert abs(t["logic"] - 1.302) < 1e-6
+    assert abs(t["net"] - 1.448) < 1e-6
+
+
+def test_table3_orderings_emerge_from_model():
+    cpd = {
+        "proposed": analyze(build_proposed_mult4())["cpd"],
+        "lm": analyze(build_lm_mult4())["cpd"],
+        "acc": analyze(build_acc_mult4())["cpd"],
+    }
+    assert cpd["proposed"] < cpd["lm"] < cpd["acc"]       # paper Table III order
+    # LM's penalty is routing CO3 through the fabric: net-dominated.
+    lm = analyze(build_lm_mult4())
+    assert lm["net"] > analyze(build_proposed_mult4())["net"]
+
+
+def test_lm_within_10pct_of_published():
+    assert abs(analyze(build_lm_mult4())["cpd"] - PUBLISHED_ROWS["lm"]["cpd"]) \
+        / PUBLISHED_ROWS["lm"]["cpd"] < 0.10
+
+
+def test_pipeline_improves_fmax():
+    rep = pipelined_report()
+    assert rep["fmax_mhz"] > rep["unpipelined_fmax_mhz"]
