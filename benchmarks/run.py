@@ -7,6 +7,7 @@ system benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   pipeline -> paper §VI       (pipelined Fmax)
   kernels  -> TPU-adaptation kernels: us/call + GOP/s vs the jnp oracle
   gemm     -> quantized-GEMM backends (the "multiplier array" system view)
+  serving  -> continuous-batching engine: paged vs contiguous KV tokens/s
 """
 
 from __future__ import annotations
@@ -150,6 +151,32 @@ def bench_gemm_backends():
         print(f"gemm.{backend},{us:.1f},gflops={flops/us*1e-3:.2f};relerr={rel:.4f}")
 
 
+def bench_serving():
+    """Continuous-batching engine throughput, paged vs contiguous KV, on a
+    shared Poisson trace (reduced qwen2; see EXPERIMENTS.md §Serving)."""
+    from repro.configs import Runtime, ServingConfig, get_config
+    from repro.serving.api import poisson_trace, run_trace
+    from repro.serving.engine import InferenceEngine, build_params
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    rt = Runtime(quant_backend="w4a4_packed", cache_dtype="bfloat16",
+                 remat="none", loss_chunk=0)
+    trace = poisson_trace(8, 0.5, [8, 16, 32], [8, 16], cfg.vocab, seed=0)
+    params = build_params(cfg, rt)
+    for layout in ("paged", "contiguous"):
+        sv = ServingConfig(layout=layout, max_batch=4, page_size=16,
+                           num_pages=48, max_ctx=128)
+        engine = InferenceEngine(cfg, rt, sv, params=params)
+        engine.warmup([8, 16, 32])
+        stats, _ = run_trace(engine, trace)
+        us = stats["wall_s"] * 1e6 / max(stats["steps"], 1)
+        print(f"serving.{layout},{us:.1f},"
+              f"tok_per_s={stats['decode_tok_per_s']:.2f};"
+              f"p50_s={stats['latency_p50_s']:.3f};"
+              f"p95_s={stats['latency_p95_s']:.3f};"
+              f"preempt={stats['requests_preempted']}")
+
+
 def main() -> None:
     bench_table2()
     bench_table3()
@@ -157,6 +184,7 @@ def main() -> None:
     bench_pipeline()
     bench_kernels()
     bench_gemm_backends()
+    bench_serving()
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ from __future__ import annotations
 
 from typing import Dict
 
-from .base import ArchConfig, Runtime, SHAPES, Shape, runnable, COST_PROBE  # noqa: F401
+from .base import (  # noqa: F401
+    ArchConfig, COST_PROBE, Runtime, ServingConfig, SHAPES, Shape, runnable,
+)
 
 from .musicgen_large import CONFIG as _musicgen
 from .mamba2_130m import CONFIG as _mamba2

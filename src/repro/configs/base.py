@@ -167,3 +167,54 @@ class Runtime:
 
 
 COST_PROBE = Runtime(scan_layers=False, attn_impl="full", loss_chunk=0, remat="none")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Continuous-batching serving knobs (see repro.serving).
+
+    `layout="paged"` allocates KV storage as fixed-size pages from a shared
+    pool with per-sequence block tables; `"contiguous"` preallocates one
+    `max_ctx`-long cache row per batch slot (static-slot baseline).  Bucketing
+    bounds the number of distinct jit signatures: decode batches are padded
+    up to the nearest bucket, prompts to the nearest power-of-two length.
+    """
+
+    layout: str = "paged"           # paged | contiguous
+    max_batch: int = 8              # concurrent decode slots
+    page_size: int = 16             # tokens per KV page
+    num_pages: int = 128            # shared pool size (paged layout)
+    max_ctx: int = 256              # max prompt+generation length per request
+    decode_buckets: Tuple[int, ...] = ()   # () => powers of two up to max_batch
+
+    def __post_init__(self):
+        assert self.layout in ("paged", "contiguous"), self.layout
+        assert self.max_ctx % self.page_size == 0, \
+            f"max_ctx {self.max_ctx} must be a multiple of page_size {self.page_size}"
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.max_ctx // self.page_size
+
+    @property
+    def buckets(self) -> Tuple[int, ...]:
+        if self.decode_buckets:
+            return tuple(sorted(set(self.decode_buckets) | {self.max_batch}))
+        b, out = 1, []
+        while b < self.max_batch:
+            out.append(b)
+            b *= 2
+        return tuple(out) + (self.max_batch,)
+
+    def decode_bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.max_batch
+
+    @staticmethod
+    def prompt_bucket(n: int) -> int:
+        b = 8
+        while b < n:
+            b *= 2
+        return b

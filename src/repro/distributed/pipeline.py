@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable,        # (stage_params, x_microbatch) -> y_microbatch
@@ -72,11 +74,11 @@ def pipeline_apply(
         outs = jax.lax.psum(outs, stage_axis)
         return outs.reshape(x_all.shape)
 
-    y = jax.shard_map(
+    y = shard_map(
         per_device,
         mesh=mesh,
         in_specs=(P(stage_axis), P()),
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )(params_stacked, x)
     return y

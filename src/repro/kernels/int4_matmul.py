@@ -67,7 +67,7 @@ def int4_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jnp.ndarray:
     M, K = a_q.shape
     N = w_packed.shape[1] * 2
@@ -92,6 +92,7 @@ def int4_matmul(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        interpret=interpret,
+        interpret=(jax.default_backend() != "tpu"
+                   if interpret is None else interpret),
     )(a_q, w_packed, a_scale, w_scale)
     return out[:M, :N]

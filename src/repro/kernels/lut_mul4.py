@@ -57,12 +57,17 @@ def lut_mul4(
     b_q: jnp.ndarray,
     strategy: str = "onehot",
     block: tuple = DEFAULT_BLOCK,
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jnp.ndarray:
     """Elementwise signed-int4 product of int8-valued tensors -> int8.
 
     Inputs are flattened to 2D tiles; arbitrary leading shapes supported.
+    `interpret=None` auto-selects: compile on TPU, interpret elsewhere
+    (CPU/GPU have no Mosaic lowering for this kernel); pass an explicit
+    bool to override either way.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     assert a_q.shape == b_q.shape
     shape = a_q.shape
     n = 1

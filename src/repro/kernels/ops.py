@@ -26,7 +26,7 @@ def _default_interpret(flag: Optional[bool]) -> bool:
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
         return env not in ("0", "false", "False")
-    return jax.default_backend() == "cpu"
+    return jax.default_backend() != "tpu"
 
 
 def mul4(a_q, b_q, strategy: str = "onehot", interpret: Optional[bool] = None):

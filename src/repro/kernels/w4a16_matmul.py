@@ -54,7 +54,7 @@ def w4a16_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jnp.ndarray:
     M, K = x.shape
     N = w_packed.shape[1] * 2
@@ -84,6 +84,7 @@ def w4a16_matmul(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        interpret=interpret,
+        interpret=(jax.default_backend() != "tpu"
+                   if interpret is None else interpret),
     )(x, w_packed, w_scale)
     return out[:M, :N]

@@ -1,85 +1,123 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with the
-paper's packed-int4 weights (or any quant backend), measuring tokens/s.
+"""Continuous-batching serving driver over the paper's packed-int4 weights.
 
+Drives the repro.serving engine with synthetic Poisson traffic (mixed
+prompt/generation lengths) and prints a JSON report with tokens/s and
+p50/p95 per-request latency.  `--layout compare` runs the same trace through
+the paged and contiguous KV layouts and verifies the generated tokens are
+bit-identical.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --batch 4 --prompt-len 32 --gen 16 --quant w4a4_packed
+        --layout compare --requests 8 --rate 0.5 --quant w4a4_packed \
+        --out BENCH_serve.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import Runtime, get_config
-from repro.core.qlinear import pack_tree
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import init_caches, init_model
+from repro.configs import Runtime, ServingConfig, get_config
+from repro.serving.api import poisson_trace, run_trace
+from repro.serving.engine import InferenceEngine, build_params
 
 
-def serve(arch: str, *, reduced=True, batch=4, prompt_len=32, gen=16,
+def serve(arch: str, *, reduced=True, layout=None, max_batch=4,
+          page_size=16, num_pages=48, max_ctx=128, requests=8, rate=0.5,
+          prompt_lens=(8, 16, 32), gen_lens=(8, 16),
           quant_backend="w4a4_packed", cache_dtype="bfloat16", seed=0):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
+    if layout is None:   # paged needs a pure-attention stack (SSM doesn't page)
+        blocks = tuple(cfg.pattern) + tuple(cfg.tail)
+        layout = "paged" if all(bt == "A" for bt in blocks) else "contiguous"
     rt = Runtime(scan_layers=True, attn_impl="chunked",
-                 attn_chunk_q=min(512, prompt_len), loss_chunk=0,
+                 attn_chunk_q=min(512, max_ctx), loss_chunk=0,
                  quant_backend=quant_backend, cache_dtype=cache_dtype,
                  remat="none")
-    key = jax.random.PRNGKey(seed)
-    params = init_model(key, cfg)
-    if quant_backend in ("w4a4_packed", "w4a16_packed"):
-        params = pack_tree(params, rt.quant_cfg(cfg))
+    trace = poisson_trace(requests, rate, prompt_lens, gen_lens,
+                          cfg.vocab, seed=seed)
+    layouts = (["paged", "contiguous"] if layout == "compare" else [layout])
+    params = build_params(cfg, rt, seed)
 
-    total = prompt_len + gen
-    caches = init_caches(cfg, rt, batch=batch, seq=total)
-    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)
+    report = {"arch": arch, "reduced": reduced,
+              "quant": quant_backend, "cache_dtype": cache_dtype,
+              "requests": requests, "rate_per_step": rate}
+    tokens_by_layout = {}
+    for lay in layouts:
+        sv = ServingConfig(layout=lay, max_batch=max_batch,
+                           page_size=page_size, num_pages=num_pages,
+                           max_ctx=max_ctx)
+        engine = InferenceEngine(cfg, rt, sv, params=params)
+        engine.warmup(prompt_lens)     # compiles excluded from the stats
+        stats, finished = run_trace(engine, trace)
+        report[lay] = stats
+        tokens_by_layout[lay] = [r.tokens for r in finished]
 
-    prefill_fn = jax.jit(make_prefill_step(cfg, rt), donate_argnums=(2,))
-    decode_fn = jax.jit(make_decode_step(cfg, rt), donate_argnums=(2,))
-
-    t0 = time.time()
-    logits, caches = prefill_fn(params, prompts, caches)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-
-    tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1)[:, None]
-    out_tokens = [np.asarray(tok)]
-    t0 = time.time()
-    for t in range(gen - 1):
-        pos = jnp.full((batch, 1), prompt_len + t, jnp.int32)
-        logits, caches = decode_fn(params, tok, caches, pos)
-        tok = jnp.argmax(logits[:, : cfg.vocab], axis=-1)[:, None]
-        out_tokens.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    seqs = np.concatenate(out_tokens, axis=1)
-    return {
-        "prefill_s": t_prefill,
-        "decode_tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
-        "generated": seqs[:, :8].tolist(),
-    }
+    if layout == "compare":
+        same = tokens_by_layout["paged"] == tokens_by_layout["contiguous"]
+        report["bit_identical"] = bool(same)
+        if not same:
+            # only the paged layout preempts; with a lossy KV dtype the
+            # recompute-resume re-attends in full precision, so argmax can
+            # legitimately diverge (EXPERIMENTS.md §Serving)
+            if (cache_dtype in ("int8", "int4")
+                    and report["paged"]["requests_preempted"] > 0):
+                report["note"] = ("paged diverged after preemption with a "
+                                  "lossy KV-cache dtype: recomputed prefixes "
+                                  "attend in full precision — expected")
+            else:
+                raise SystemExit(
+                    "FAIL: paged and contiguous decode diverged")
+    # headline numbers from the primary layout
+    primary = report[layouts[0]]
+    report["tokens_per_s"] = primary["decode_tok_per_s"]
+    report["latency_p50_s"] = primary["latency_p50_s"]
+    report["latency_p95_s"] = primary["latency_p95_s"]
+    return report
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--reduced", action="store_true", default=True)
+    grp.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--layout", default=None,
+                    choices=["paged", "contiguous", "compare"],
+                    help="default: paged for attention archs, else contiguous")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=48)
+    ap.add_argument("--max-ctx", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate in requests per decode step")
+    ap.add_argument("--prompt-lens", default="8,16,32")
+    ap.add_argument("--gen-lens", default="8,16")
     ap.add_argument("--quant", default="w4a4_packed")
     ap.add_argument("--cache-dtype", default="bfloat16")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this path")
     args = ap.parse_args()
-    out = serve(args.arch, reduced=not args.full, batch=args.batch,
-                prompt_len=args.prompt_len, gen=args.gen,
-                quant_backend=args.quant, cache_dtype=args.cache_dtype)
-    print(json.dumps(out))
+
+    out = serve(
+        args.arch, reduced=args.reduced, layout=args.layout,
+        max_batch=args.max_batch, page_size=args.page_size,
+        num_pages=args.num_pages, max_ctx=args.max_ctx,
+        requests=args.requests, rate=args.rate,
+        prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
+        gen_lens=tuple(int(x) for x in args.gen_lens.split(",")),
+        quant_backend=args.quant, cache_dtype=args.cache_dtype,
+        seed=args.seed,
+    )
+    text = json.dumps(out, indent=1)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
 
 
 if __name__ == "__main__":

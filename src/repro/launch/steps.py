@@ -65,6 +65,19 @@ def make_decode_step(cfg: ArchConfig, rt: Runtime):
     return step
 
 
+def make_serving_steps(cfg: ArchConfig, rt: Runtime):
+    """(jit'd prefill, jit'd decode) for the continuous-batching engine.
+
+    Both donate the cache argument (the KV pool is the dominant buffer and
+    is threaded through every step).  jit re-specializes per input shape, so
+    the engine's batch/prompt bucketing bounds the number of compilations —
+    one per (bucket) signature, cached across the serving run.
+    """
+    prefill = jax.jit(make_prefill_step(cfg, rt), donate_argnums=(2,))
+    decode = jax.jit(make_decode_step(cfg, rt), donate_argnums=(2,))
+    return prefill, decode
+
+
 # ------------------------------------------------------------ input specs --
 def _sds(shape, dtype, sharding=None):
     return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)

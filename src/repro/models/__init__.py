@@ -1,4 +1,15 @@
-"""Model zoo: block library + decoder LM assembly for all assigned archs."""
+"""Model zoo: block library + decoder LM assembly for all assigned archs.
+
+KV-cache interface: `init_caches` builds the contiguous (ring-buffer)
+layout; the paged layout used by the serving engine is built by
+`repro.serving.kv_pages.init_paged_caches` and consumed by the same
+attention code (dispatch on the `"tbl"` block-table key in the cache dict).
+"""
+from .attention import (  # noqa: F401
+    dequantize_kv,
+    init_attn_cache,
+    quantize_kv,
+)
 from .transformer import (  # noqa: F401
     decode_step,
     forward,

@@ -113,10 +113,35 @@ def init_attn_cache(cfg: ArchConfig, rt: Runtime, batch: int, seq: int) -> Dict:
     return cache
 
 
+def quantize_kv(val, int4: bool):
+    """Per-(token, head) absmax quantization of K/V slabs [..., hd].
+    Shared by the contiguous ring cache and the paged pool (kv_pages) so the
+    two layouts stay bit-identical."""
+    qmax = 7.0 if int4 else 127.0
+    scale = jnp.max(jnp.abs(val), axis=-1, keepdims=True) / qmax + 1e-8
+    q = jnp.clip(jnp.round(val / scale), -qmax, qmax).astype(jnp.int8)
+    if int4:
+        from repro.core.quant import pack_int4
+
+        q = pack_int4(q, axis=-1)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale):
+    """Inverse of quantize_kv (uint8 => packed nibbles)."""
+    if q.dtype == jnp.uint8:
+        from repro.core.quant import unpack_int4
+
+        q = unpack_int4(q, axis=-1)
+    return (q.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+
+
 def _scatter_time(buf, val, slots):
-    """buf [B, size, ...] <- val [B, n, ...] at slot indices slots [B, n]."""
+    """buf [B, size, ...] <- val [B, n, ...] at slot indices slots [B, n].
+    Out-of-range slots (the drop sentinel for pad/invalid positions) are
+    silently discarded."""
     bidx = jnp.arange(buf.shape[0])[:, None] * jnp.ones_like(slots)
-    return buf.at[bidx, slots].set(val)
+    return buf.at[bidx, slots].set(val.astype(buf.dtype), mode="drop")
 
 
 def _dus_time(buf, val, start):
@@ -132,26 +157,21 @@ def _cache_write(cache: Dict, k, v, abs_pos, aligned: bool = False) -> Dict:
 
     `aligned=True` asserts every batch row writes the same positions
     (step-aligned serving): contiguous DUS writes (positions must not wrap
-    mid-range — callers pass n=1 or a non-wrapping prefill range).
+    mid-range — callers pass n=1 or a non-wrapping prefill range).  In the
+    scatter path, negative positions (left-pad / inactive serving rows) are
+    routed out of bounds and dropped.
     """
     size = cache["k"].shape[1]
-    slots = abs_pos % size
+    slots = jnp.where(abs_pos >= 0, abs_pos % size, size)   # size => dropped
     out = dict(cache)
     write = ((lambda buf, val: _dus_time(buf, val, slots[0, 0]))
              if aligned else (lambda buf, val: _scatter_time(buf, val, slots)))
     if "k_scale" in cache:
         int4 = cache["k"].dtype == jnp.uint8        # packed-nibble cache
-        qmax = 7.0 if int4 else 127.0
         for name, val in (("k", k), ("v", v)):
-            scale = jnp.max(jnp.abs(val), axis=-1, keepdims=True) / qmax + 1e-8
-            q = jnp.clip(jnp.round(val / scale), -qmax, qmax).astype(jnp.int8)
-            if int4:
-                from repro.core.quant import pack_int4
-
-                q = pack_int4(q, axis=-1)
+            q, scale = quantize_kv(val, int4)
             out[name] = write(cache[name], q)
-            out[name + "_scale"] = write(cache[name + "_scale"],
-                                         scale.astype(jnp.float32))
+            out[name + "_scale"] = write(cache[name + "_scale"], scale)
     else:
         out["k"] = write(cache["k"], k)
         out["v"] = write(cache["v"], v)
@@ -161,15 +181,8 @@ def _cache_write(cache: Dict, k, v, abs_pos, aligned: bool = False) -> Dict:
 
 def _cache_read(cache: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
     if "k_scale" in cache:
-        kq, vq = cache["k"], cache["v"]
-        if kq.dtype == jnp.uint8:                   # packed int4
-            from repro.core.quant import unpack_int4
-
-            kq = unpack_int4(kq, axis=-1)
-            vq = unpack_int4(vq, axis=-1)
-        k = kq.astype(jnp.float32) * cache["k_scale"]
-        v = vq.astype(jnp.float32) * cache["v_scale"]
-        return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+        return (dequantize_kv(cache["k"], cache["k_scale"]),
+                dequantize_kv(cache["v"], cache["v_scale"]))
     return cache["k"], cache["v"]
 
 
@@ -273,7 +286,31 @@ def apply_attention(
         k = apply_mrope(k, mp, cfg.rope_theta, cfg.mrope_sections)
 
     new_cache = None
-    if cache is not None and S == 1:
+    if cache is not None and "tbl" in cache:
+        # ---- paged KV (serving): pool + block table, see serving/kv_pages --
+        from repro.serving.kv_pages import paged_read, paged_write
+
+        if S == 1:
+            # decode: write through the block table, gather own pages back
+            new_cache = paged_write(cache, k, v, tpos)
+            kf, vf, kpos = paged_read(new_cache, tpos[:, -1])
+            out = attention_core(
+                q, kf, vf,
+                q_positions=tpos, k_positions=kpos,
+                window=cfg.local_window, impl="full", chunk_q=rt.attn_chunk_q,
+            )
+        else:
+            # prefill: the prompt is the whole context — attend in-flight,
+            # write it into the pages for later decode steps
+            out = attention_core(
+                q, k, v,
+                q_positions=tpos, k_positions=tpos,
+                window=cfg.local_window, impl=rt.attn_impl,
+                chunk_q=rt.attn_chunk_q,
+            )
+            if update_cache:
+                new_cache = paged_write(cache, k, v, tpos)
+    elif cache is not None and S == 1:
         # ---- decode: append one token, attend over the cache --------------
         new_cache = _cache_write(cache, k, v, tpos, aligned=rt.aligned_decode)
         new_cache["pos"] = cache["pos"] + 1

@@ -23,7 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, Runtime
 from repro.core.quant import fake_quant
-from repro.distributed.sharding import current_mesh, dp_axes
+from repro.distributed.sharding import current_mesh, dp_axes, shard_map
 from .common import normal_init
 
 
@@ -186,12 +186,12 @@ def apply_moe(
                 e_start=e_start, n_local=n_local, cfg=cfg, rt=rt, axis="model",
             )
 
-        y, aux_t = jax.shard_map(
+        y, aux_t = shard_map(
             body,
             mesh=mesh,
             in_specs=(P(dspec, None), P(None, None), especs),
             out_specs=(P(dspec, None), P(dspec)),
-            check_vma=False,
+            check=False,
         )(xf, params["router"]["w"], params["experts"])
     else:
         y, aux_t = _moe_shard(

@@ -1,0 +1,25 @@
+"""Continuous-batching inference engine for the int4-quantized models.
+
+Layers (bottom-up):
+
+  * ``kv_pages``   -- paged KV-cache: a device-side page pool + per-sequence
+                      block tables, a host-side allocator, and a
+                      ``ContinuousKVCache`` wrapper so both layouts present
+                      one manager interface to the scheduler.
+  * ``scheduler``  -- admission queue + continuous batching (requests join
+                      and leave at decode-step boundaries) + preemption when
+                      the page pool is exhausted.
+  * ``engine``     -- drives jit'd prefill/decode steps over the scheduled
+                      batch and tracks per-request state and latency stats.
+  * ``api``        -- submit()/step()/collect() facade + synthetic Poisson
+                      traffic for benchmarking realistic request mixes.
+"""
+
+from .api import ServingAPI, poisson_trace, run_trace  # noqa: F401
+from .engine import InferenceEngine  # noqa: F401
+from .kv_pages import (  # noqa: F401
+    ContinuousKVCache,
+    PagedKVCacheManager,
+    init_paged_caches,
+)
+from .scheduler import Request, Scheduler  # noqa: F401

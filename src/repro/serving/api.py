@@ -1,0 +1,89 @@
+"""Thin serving frontend: submit()/step()/collect() + synthetic traffic.
+
+`poisson_trace` draws a reproducible open-loop request trace — exponential
+interarrival times (in decode-step units, so scheduling decisions replay
+identically across engines and KV layouts) with prompt/generation lengths
+mixed over caller-provided choices.  `run_trace` feeds a trace through an
+engine and returns the stats report; serve.py's benchmark and the
+bit-exactness harness both sit on top of it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceItem:
+    arrival_step: int          # engine step at which the request arrives
+    prompt: np.ndarray         # int32 [L]
+    max_new: int
+
+
+class ServingAPI:
+    """submit/step/collect facade over the engine (the unit a network
+    frontend would wrap; requests become visible immediately)."""
+
+    def __init__(self, engine: InferenceEngine):
+        self.engine = engine
+
+    def submit(self, prompt, max_new: int, eos_id: Optional[int] = None) -> int:
+        return self.engine.submit(prompt, max_new, eos_id=eos_id)
+
+    def step(self) -> int:
+        return self.engine.step()
+
+    def collect(self) -> List[Request]:
+        return self.engine.collect()
+
+    def stats(self) -> Dict:
+        return self.engine.stats()
+
+
+def poisson_trace(
+    n_requests: int,
+    rate_per_step: float,
+    prompt_lens: Sequence[int],
+    gen_lens: Sequence[int],
+    vocab: int,
+    seed: int = 0,
+) -> List[TraceItem]:
+    """Open-loop Poisson arrivals: interarrival ~ Exp(rate) in decode-step
+    units; prompt/gen lengths drawn uniformly from the given choices."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / max(rate_per_step, 1e-9))
+        L = int(rng.choice(list(prompt_lens)))
+        out.append(TraceItem(
+            arrival_step=int(t),
+            prompt=rng.integers(0, vocab, size=L, dtype=np.int32),
+            max_new=int(rng.choice(list(gen_lens))),
+        ))
+    return out
+
+
+def run_trace(engine: InferenceEngine, trace: List[TraceItem],
+              max_steps: int = 100_000) -> Tuple[Dict, List[Request]]:
+    """Drive a trace to completion: submit each request at its arrival step,
+    step until every request finished.  Returns (stats, finished requests
+    sorted by rid)."""
+    pending = sorted(trace, key=lambda it: it.arrival_step)
+    finished: List[Request] = []
+    i, step_idx = 0, 0
+    while len(finished) < len(trace):
+        if step_idx >= max_steps:
+            raise RuntimeError(f"trace incomplete after {max_steps} steps")
+        while i < len(pending) and pending[i].arrival_step <= step_idx:
+            engine.submit(pending[i].prompt, pending[i].max_new)
+            i += 1
+        engine.step()
+        finished.extend(engine.collect())
+        step_idx += 1
+    return engine.stats(), sorted(finished, key=lambda r: r.rid)

@@ -1,0 +1,271 @@
+"""Inference engine: drives jit'd prefill/decode steps over the scheduled
+batch with per-request state tracking and latency/throughput stats.
+
+One `step()` is a decode-step boundary: admit (+prefill) newly-arrived
+requests, preempt if the page pool is dry, run one decode step for the
+running set, retire finished requests.  Greedy decoding (argmax), which is
+what the bit-exactness harness compares across KV layouts.
+
+Batch construction is identical for both layouts — running requests compacted
+in slot order, padded to the nearest bucket with inactive rows (position -1:
+attention masks them and their cache writes are dropped) — so paged and
+contiguous runs of the same trace execute the same program shapes and the
+same per-row math.  The layouts differ only in where KV bytes live:
+
+  * paged      -- pool + block tables travel with the batch; joining/leaving
+                  requests exchange a [pages_per_seq] int row, never KV data.
+  * contiguous -- each slot owns a max_ctx row; admission scatters a freshly
+                  prefilled row into the full cache (an O(cache) copy that the
+                  paged layout exists to avoid — see EXPERIMENTS.md §Serving).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Runtime, ServingConfig
+from repro.core.qlinear import pack_tree
+from repro.launch.steps import make_serving_steps
+from repro.models import init_caches, init_model
+from repro.serving.kv_pages import (
+    ContinuousKVCache,
+    PagedKVCacheManager,
+    gather_rows,
+    init_paged_caches,
+    scatter_rows,
+    with_block_tables,
+)
+from repro.serving.scheduler import Request, Scheduler
+
+
+def build_params(cfg: ArchConfig, rt: Runtime, seed: int = 0):
+    """Init (and, for packed backends, pre-pack) serving weights."""
+    params = init_model(jax.random.PRNGKey(seed), cfg)
+    if rt.quant_backend in ("w4a4_packed", "w4a16_packed"):
+        params = pack_tree(params, rt.quant_cfg(cfg))
+    return params
+
+
+class InferenceEngine:
+    """submit() requests, step() the world, collect() finished requests."""
+
+    def __init__(self, cfg: ArchConfig, rt: Runtime, sv: ServingConfig,
+                 params=None, seed: int = 0, clock=time.time):
+        # continuous batching puts rows at different positions: cache writes
+        # must scatter per-row, never assume step-aligned DUS
+        import dataclasses
+        rt = dataclasses.replace(rt, aligned_decode=False)
+        blocks = tuple(cfg.pattern) + tuple(cfg.tail)
+        # SSM/LRU state integrates every input token, so left-padded prefill
+        # would pollute it: non-attention archs serve through the contiguous
+        # layout with exact-length (per-L compiled) prefill instead.
+        self._all_attention = all(bt == "A" for bt in blocks)
+        assert self._all_attention or sv.layout == "contiguous", (
+            f"paged KV serving requires an all-attention arch (got {blocks});"
+            " use layout='contiguous'")
+        self.cfg, self.rt, self.sv = cfg, rt, sv
+        self.clock = clock
+        self.params = params if params is not None \
+            else build_params(cfg, rt, seed)
+
+        if sv.layout == "paged":
+            self.kv = PagedKVCacheManager(sv)
+            # batch=0 template: pool leaves are batch-independent; block
+            # tables are rebound per call via with_block_tables
+            self.caches = init_paged_caches(cfg, rt, 0, sv)
+        else:
+            self.kv = ContinuousKVCache(sv)
+            self.caches = init_caches(cfg, rt, batch=sv.max_batch,
+                                      seq=sv.max_ctx)
+        self.scheduler = Scheduler(self.kv, sv.max_batch)
+        self._prefill, self._decode = make_serving_steps(cfg, rt)
+
+        self._next_rid = 0
+        self._finished: List[Request] = []
+        self._all: Dict[int, Request] = {}
+        # stats
+        self.n_steps = 0
+        self.n_decode_tokens = 0
+        self.n_prefill_tokens = 0
+        self.t_start = None
+
+    # -------------------------------------------------------------- api --
+    def submit(self, prompt, max_new: int, arrival: Optional[float] = None,
+               eos_id: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        now = self.clock()
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new=max_new,
+                      arrival=now if arrival is None else arrival,
+                      eos_id=eos_id)
+        req.t_visible = now
+        self._all[rid] = req
+        self.scheduler.submit(req)
+        return rid
+
+    def collect(self) -> List[Request]:
+        out, self._finished = self._finished, []
+        return out
+
+    def warmup(self, prompt_lens=()) -> None:
+        """Compile every expected step signature (one prefill per prompt
+        bucket, one decode per batch bucket) before the measured window, so
+        latency/throughput stats don't absorb multi-second jit compiles.
+        Dummy calls use position -1 everywhere: every cache write is dropped
+        and pool/cache state is untouched.  Resumed prefixes can still hit a
+        new prompt bucket mid-run; that compile is attributed to the run."""
+        for L in sorted({self._prompt_pad(len_) for len_ in prompt_lens}):
+            tokens = jnp.zeros((1, L), jnp.int32)
+            positions = jnp.full((1, L), -1, jnp.int32)
+            if self.sv.layout == "paged":
+                caches = with_block_tables(
+                    self.caches, np.zeros((1, self.sv.pages_per_seq)))
+                _, self.caches = self._prefill(self.params, tokens, caches,
+                                               positions)
+            else:
+                row = init_caches(self.cfg, self.rt, batch=1,
+                                  seq=self.sv.max_ctx)
+                self._prefill(self.params, tokens, row, positions)
+        for nb in self.sv.buckets:
+            tok = jnp.zeros((nb, 1), jnp.int32)
+            pos = jnp.full((nb, 1), -1, jnp.int32)
+            if self.sv.layout == "paged":
+                caches = with_block_tables(
+                    self.caches, np.zeros((nb, self.sv.pages_per_seq)))
+                _, self.caches = self._decode(self.params, tok, caches, pos)
+            else:
+                sub = gather_rows(self.caches, [0] * nb)
+                self._decode(self.params, tok, sub, pos)
+
+    def step(self) -> int:
+        """One decode-step boundary; returns the number of running requests
+        after the step (0 = idle)."""
+        now = self.clock()
+        if self.t_start is None:
+            self.t_start = now
+        for req in self.scheduler.admit(now):
+            self._prefill_request(req)
+        self._retire()                 # a 1-token request is done at prefill
+        self.scheduler.ensure_decode()
+        batch = self.scheduler.batch()
+        if batch:
+            self._decode_batch(batch)
+        self.n_steps += 1
+        self._retire()
+        return len(self.scheduler.running)
+
+    def _retire(self) -> None:
+        now = self.clock()
+        for req in list(self.scheduler.running.values()):
+            if req.done:
+                self.scheduler.finish(req, now)
+                self._finished.append(req)
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and self.scheduler.idle:
+                return
+        raise RuntimeError(f"not idle after {max_steps} steps")
+
+    # -------------------------------------------------------- internals --
+    def _prompt_pad(self, L: int) -> int:
+        """Prompt lengths are bucketed (fewer compiles) for attention archs;
+        SSM/LRU state integrates pad tokens, so those prefill at exact L."""
+        return self.sv.prompt_bucket(L) if self._all_attention else L
+
+    def _greedy(self, logits) -> np.ndarray:
+        return np.asarray(
+            jnp.argmax(logits[:, : self.cfg.vocab], axis=-1), np.int32)
+
+    def _prefill_request(self, req: Request) -> None:
+        """Prefill a (re-)admitted request's full prefix (batch of one,
+        prompt left-padded to a power-of-two bucket) and emit its first
+        token from the prefill logits."""
+        prefix = req.prefix
+        L = len(prefix)
+        Lb = self._prompt_pad(L)
+        tokens = np.zeros((1, Lb), np.int32)
+        tokens[0, Lb - L:] = prefix
+        positions = (np.arange(Lb, dtype=np.int32) - (Lb - L))[None, :]
+
+        if self.sv.layout == "paged":
+            caches = with_block_tables(self.caches,
+                                       self.kv.table_row(req.rid)[None])
+            logits, self.caches = self._prefill(
+                self.params, jnp.asarray(tokens), caches,
+                jnp.asarray(positions))
+        else:
+            # a fresh init row IS the reset: prefill into it, then scatter
+            # the row into the slot (evicting any previous tenant's state)
+            row = init_caches(self.cfg, self.rt, batch=1, seq=self.sv.max_ctx)
+            logits, row = self._prefill(
+                self.params, jnp.asarray(tokens), row, jnp.asarray(positions))
+            self.caches = scatter_rows(self.caches, row, [req.slot])
+
+        req.n_cached = L
+        self.n_prefill_tokens += L
+        req.tokens.append(int(self._greedy(logits)[0]))
+        if req.t_first is None:
+            req.t_first = self.clock()
+
+    def _decode_batch(self, batch: List[Request]) -> None:
+        """One decode step over the running set, padded to a bucket."""
+        n = len(batch)
+        nb = self.sv.decode_bucket(n)
+        tok = np.zeros((nb, 1), np.int32)
+        pos = np.full((nb, 1), -1, np.int32)
+        for i, req in enumerate(batch):
+            tok[i, 0] = req.tokens[-1]      # feed the newest generated token
+            pos[i, 0] = req.n_cached        # ... at the next cache position
+
+        if self.sv.layout == "paged":
+            tbl = np.stack([self.kv.table_row(r.rid) for r in batch]
+                           + [np.zeros(self.sv.pages_per_seq, np.int32)]
+                           * (nb - n))
+            caches = with_block_tables(self.caches, tbl)
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(tok), caches, jnp.asarray(pos))
+        else:
+            rows = [r.slot for r in batch] \
+                + [self.sv.max_batch - 1] * (nb - n)   # pads write nothing
+            sub = gather_rows(self.caches, rows)
+            logits, sub = self._decode(
+                self.params, jnp.asarray(tok), sub, jnp.asarray(pos))
+            # scatter only the active rows back (a pad row may alias an
+            # active slot, and duplicate scatter indices would race)
+            self.caches = scatter_rows(
+                self.caches, gather_rows(sub, np.arange(n)), rows[:n])
+        nxt = self._greedy(logits)
+        for i, req in enumerate(batch):
+            req.n_cached += 1
+            req.tokens.append(int(nxt[i]))
+        self.n_decode_tokens += n
+
+    # ------------------------------------------------------------- stats --
+    def stats(self) -> Dict:
+        done = [r for r in self._all.values() if r.t_finish is not None]
+        lat = [r.t_finish - r.t_visible for r in done]
+        ttft = [r.t_first - r.t_visible for r in done if r.t_first]
+        wall = (self.clock() - self.t_start) if self.t_start else 0.0
+        pct = (lambda xs, q: float(np.percentile(xs, q)) if xs else None)
+        return {
+            "layout": self.sv.layout,
+            "requests_finished": len(done),
+            "requests_preempted": self.scheduler.n_preemptions,
+            "steps": self.n_steps,
+            "prefill_tokens": self.n_prefill_tokens,
+            "decode_tokens": self.n_decode_tokens,
+            "wall_s": wall,
+            "decode_tok_per_s": self.n_decode_tokens / wall if wall else None,
+            "latency_p50_s": pct(lat, 50),
+            "latency_p95_s": pct(lat, 95),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p95_s": pct(ttft, 95),
+            "kv_pages_high_water": getattr(self.kv, "high_water", 0),
+        }

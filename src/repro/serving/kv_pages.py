@@ -1,0 +1,261 @@
+"""Paged KV cache: fixed-size pages from a preallocated pool + block tables.
+
+Device side, each attention layer's cache is a plain dict (scan/vmap-friendly
+pytree):
+
+    {"tbl": [B, pages_per_seq] int32,        # logical page -> physical page
+     "k":   [num_pages, page_size, KV, hd],  # shared pool
+     "v":   [num_pages, page_size, KV, hd],
+     (+ "k_scale"/"v_scale" [num_pages, page_size, KV, 1] when quantized)}
+
+The attention module dispatches on the ``"tbl"`` key, so the same model code
+consumes the contiguous ring cache and the paged pool.  Logical slot ``j`` of
+a sequence lives at flat pool index ``tbl[j // page_size] * page_size +
+j % page_size``; a gather along that index vector reconstructs exactly the
+[B, max_ctx, KV, hd] layout of the contiguous cache, which is what makes
+paged and contiguous decode bit-identical.
+
+Host side, ``PagedKVCacheManager`` owns the free list and per-request page
+lists; ``ContinuousKVCache`` wraps the static-slot layout behind the same
+manager interface (its "pages" are whole cache rows, so `ensure` only checks
+the context bound).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Runtime, ServingConfig
+from repro.models.attention import dequantize_kv, quantize_kv
+
+
+# ------------------------------------------------------- device-side cache --
+def init_paged_attn_cache(cfg: ArchConfig, rt: Runtime, batch: int,
+                          sv: ServingConfig) -> Dict:
+    """One attention layer's paged cache (pool + block table)."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    P, ps = sv.num_pages, sv.page_size
+    cache = {"tbl": jnp.zeros((batch, sv.pages_per_seq), jnp.int32)}
+    if rt.cache_dtype == "int8":
+        z = jnp.zeros((P, ps, kv, hd), jnp.int8)
+        s = jnp.zeros((P, ps, kv, 1), jnp.float32)
+        cache.update({"k": z, "v": z, "k_scale": s, "v_scale": s})
+    elif rt.cache_dtype == "int4":
+        z = jnp.zeros((P, ps, kv, hd // 2), jnp.uint8)
+        s = jnp.zeros((P, ps, kv, 1), jnp.float32)
+        cache.update({"k": z, "v": z, "k_scale": s, "v_scale": s})
+    else:
+        dt = jnp.bfloat16 if rt.cache_dtype == "bfloat16" else jnp.float32
+        z = jnp.zeros((P, ps, kv, hd), dt)
+        cache.update({"k": z, "v": z})
+    return cache
+
+
+def init_paged_caches(cfg: ArchConfig, rt: Runtime, batch: int,
+                      sv: ServingConfig) -> Dict:
+    """Full-model paged caches, mirroring transformer.init_caches' structure
+    ({"rep": stacked-over-repeats, "tail": per-layer}).  Paged serving only
+    supports pure-attention stacks (SSM/LRU states are O(1) and don't page).
+    """
+    blocks = tuple(cfg.pattern) + tuple(cfg.tail)
+    assert all(bt == "A" for bt in blocks), (
+        f"paged KV serving requires an all-attention arch, got {blocks}")
+
+    def unit(_):
+        return {f"u{j}": {"attn": init_paged_attn_cache(cfg, rt, batch, sv)}
+                for j in range(len(cfg.pattern))}
+
+    stacked = jax.vmap(unit)(jnp.arange(cfg.n_repeats))
+    tail = {f"tail{t}": {"attn": init_paged_attn_cache(cfg, rt, batch, sv)}
+            for t in range(len(cfg.tail))}
+    return {"rep": stacked, "tail": tail}
+
+
+def paged_write(cache: Dict, k, v, abs_pos) -> Dict:
+    """Write k/v [B, n, KV, hd] at absolute positions abs_pos [B, n] through
+    the block table.  Negative positions (left-pad / inactive rows) are routed
+    to an out-of-bounds flat index and dropped."""
+    P, ps = cache["k"].shape[:2]
+    tbl = cache["tbl"]
+    logical = jnp.clip(abs_pos // ps, 0, tbl.shape[1] - 1)       # [B, n]
+    phys = jnp.take_along_axis(tbl, logical, axis=1)
+    flat = jnp.where(abs_pos >= 0, phys * ps + abs_pos % ps, P * ps)
+
+    def write(pool, val):
+        fp = pool.reshape(P * ps, *pool.shape[2:])
+        fp = fp.at[flat.reshape(-1)].set(
+            val.reshape(-1, *val.shape[2:]).astype(pool.dtype), mode="drop")
+        return fp.reshape(pool.shape)
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        int4 = cache["k"].dtype == jnp.uint8
+        for name, val in (("k", k), ("v", v)):
+            q, scale = quantize_kv(val, int4)
+            out[name] = write(cache[name], q)
+            out[name + "_scale"] = write(cache[name + "_scale"], scale)
+    else:
+        out["k"] = write(cache["k"], k)
+        out["v"] = write(cache["v"], v)
+    return out
+
+
+def paged_read(cache: Dict, last_pos):
+    """Gather each row's pages back into the contiguous [B, max_ctx, KV, hd]
+    layout.  last_pos [B] is the newest valid absolute position per row (-1 =
+    inactive row); returns (k, v, kpos) with kpos[b, j] = j for valid slots,
+    -1 otherwise — the same masking contract as the contiguous cache."""
+    P, ps = cache["k"].shape[:2]
+    tbl = cache["tbl"]
+    B, pps = tbl.shape
+    max_ctx = pps * ps
+    idx = (tbl[:, :, None] * ps
+           + jnp.arange(ps, dtype=jnp.int32)[None, None, :]).reshape(B, max_ctx)
+
+    def gather(pool):
+        return pool.reshape(P * ps, *pool.shape[2:])[idx]
+
+    if "k_scale" in cache:
+        k = dequantize_kv(gather(cache["k"]), gather(cache["k_scale"]))
+        v = dequantize_kv(gather(cache["v"]), gather(cache["v_scale"]))
+    else:
+        k, v = gather(cache["k"]), gather(cache["v"])
+    j = jnp.arange(max_ctx, dtype=jnp.int32)[None, :]
+    valid = (j <= last_pos[:, None]) & (last_pos[:, None] >= 0)
+    return k, v, jnp.where(valid, j, -1)
+
+
+# -------------------------------------------------- cache-tree manipulation --
+def with_block_tables(caches: Dict, tbl) -> Dict:
+    """Rebind every layer's block table to `tbl` [B, pages_per_seq] (the same
+    positions are cached in every layer, so tables are shared).  Pool leaves
+    are passed through untouched; the batch dim of the result follows `tbl`.
+    """
+    tbl = jnp.asarray(tbl, jnp.int32)
+
+    def walk(node, stacked):
+        out = {}
+        for key, val in node.items():
+            if isinstance(val, dict):
+                out[key] = walk(val, stacked)
+            elif key == "tbl":
+                out[key] = (jnp.broadcast_to(tbl[None],
+                                             (val.shape[0],) + tbl.shape)
+                            if stacked else tbl)
+            else:
+                out[key] = val
+        return out
+
+    return {"rep": walk(caches["rep"], True),
+            "tail": walk(caches["tail"], False)}
+
+
+def gather_rows(caches: Dict, rows) -> Dict:
+    """Slice batch rows out of a contiguous cache tree (rep leaves carry the
+    batch at dim 1 under the repeat stacking, tail leaves at dim 0)."""
+    r = jnp.asarray(rows, jnp.int32)
+    return {"rep": jax.tree.map(lambda l: l[:, r], caches["rep"]),
+            "tail": jax.tree.map(lambda l: l[r], caches["tail"])}
+
+
+def scatter_rows(caches: Dict, sub: Dict, rows) -> Dict:
+    """Write a gathered/fresh sub-cache back into the full tree's rows."""
+    r = jnp.asarray(rows, jnp.int32)
+    return {
+        "rep": jax.tree.map(lambda l, s: l.at[:, r].set(s.astype(l.dtype)),
+                            caches["rep"], sub["rep"]),
+        "tail": jax.tree.map(lambda l, s: l.at[r].set(s.astype(l.dtype)),
+                             caches["tail"], sub["tail"]),
+    }
+
+
+# --------------------------------------------------------- host-side managers --
+class PagedKVCacheManager:
+    """Free-list page allocator + per-request block tables (host side).
+
+    Page ids index the device pool directly.  `ensure(rid, n)` grows rid's
+    page list to cover `n` cached tokens and reports whether the pool could
+    satisfy it — the scheduler turns a False into a preemption.  Freed pages
+    go to the back of the free list so reuse-after-free bugs surface fast.
+    """
+
+    def __init__(self, sv: ServingConfig):
+        self.sv = sv
+        self.free: deque = deque(range(sv.num_pages))
+        self.pages: Dict[int, List[int]] = {}
+        self.high_water = 0
+
+    # -- capacity ---------------------------------------------------------
+    @property
+    def available(self) -> int:
+        return len(self.free)
+
+    @property
+    def in_use(self) -> int:
+        return self.sv.num_pages - len(self.free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.sv.page_size))
+
+    def fits_alone(self, n_tokens: int) -> bool:
+        """Can a request of this total length run with the whole pool?"""
+        return (self.pages_for(n_tokens) <= self.sv.num_pages
+                and n_tokens <= self.sv.max_ctx)
+
+    # -- allocation -------------------------------------------------------
+    def ensure(self, rid: int, n_tokens: int) -> bool:
+        """Grow rid's allocation to cover n_tokens cached slots."""
+        if n_tokens > self.sv.max_ctx:
+            return False
+        have = self.pages.setdefault(rid, [])
+        need = self.pages_for(n_tokens) - len(have)
+        if need > len(self.free):
+            return False
+        for _ in range(need):
+            have.append(self.free.popleft())
+        self.high_water = max(self.high_water, self.in_use)
+        return True
+
+    def release(self, rid: int) -> None:
+        for p in self.pages.pop(rid, []):
+            self.free.append(p)
+
+    def table_row(self, rid: int) -> np.ndarray:
+        row = np.zeros((self.sv.pages_per_seq,), np.int32)
+        have = self.pages.get(rid, [])
+        row[: len(have)] = have
+        return row
+
+
+class ContinuousKVCache:
+    """The contiguous (static-slot) layout behind the same manager interface:
+    each batch slot owns a full max_ctx cache row, so `ensure` only checks
+    the context bound and there is nothing to allocate or preempt."""
+
+    def __init__(self, sv: ServingConfig):
+        self.sv = sv
+        self.high_water = 0
+
+    @property
+    def available(self) -> int:
+        return 1 << 30
+
+    def pages_for(self, n_tokens: int) -> int:
+        return 0
+
+    def fits_alone(self, n_tokens: int) -> bool:
+        return n_tokens <= self.sv.max_ctx
+
+    def ensure(self, rid: int, n_tokens: int) -> bool:
+        return n_tokens <= self.sv.max_ctx
+
+    def release(self, rid: int) -> None:
+        pass
+
+    def table_row(self, rid: int) -> Optional[np.ndarray]:
+        return None

@@ -1,0 +1,159 @@
+"""Request scheduler: admission queue, continuous batching, preemption.
+
+Requests join the running set at decode-step boundaries (admission triggers a
+prefill), leave it the step they finish, and are preempted back to the front
+of the queue when the page pool runs dry.  Preemption is recompute-style: the
+victim's pages are freed and on re-admission its full prefix (prompt + tokens
+generated so far) is re-prefilled — no KV swap-out traffic, the same policy
+vLLM defaults to for short sequences.  Resume is lossless for greedy decode
+with non-lossy cache dtypes (the bf16 cache stores K/V exactly); with an
+int8/int4 KV cache the recomputed prefix attends in full precision, so a
+resumed request's tokens may legitimately differ from an uninterrupted run.
+
+Determinism: slots are assigned lowest-free-first, the decode batch is the
+running set in slot order, and the preemption victim is always the
+latest-admitted request — so a trace replayed against either KV layout makes
+identical scheduling decisions (the engine's bit-exactness harness relies on
+this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # int32 [L]
+    max_new: int
+    arrival: float = 0.0                # engine-clock time the request exists
+    eos_id: Optional[int] = None
+    # -- runtime state ----------------------------------------------------
+    state: str = WAITING
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)  # generated
+    n_cached: int = 0                   # tokens written to the KV cache
+    n_preempts: int = 0
+    admit_seq: int = -1                 # admission order (preemption victim key)
+    t_visible: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def prefix(self) -> np.ndarray:
+        """Prompt + generated-so-far: what a (re-)prefill must process."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.tokens, np.int32)])
+
+    @property
+    def target_len(self) -> int:
+        return len(self.prompt) + self.max_new
+
+    @property
+    def done(self) -> bool:
+        if len(self.tokens) >= self.max_new:
+            return True
+        return bool(self.tokens) and self.tokens[-1] == self.eos_id
+
+
+class Scheduler:
+    """Owns the waiting queue and the running set; talks to a KV manager
+    (PagedKVCacheManager or ContinuousKVCache) for capacity decisions."""
+
+    def __init__(self, kv_manager, max_batch: int):
+        self.kv = kv_manager
+        self.max_batch = max_batch
+        self.waiting: deque = deque()
+        self.running: Dict[int, Request] = {}        # rid -> Request
+        self._free_slots: List[int] = list(range(max_batch))
+        heapq.heapify(self._free_slots)
+        self._admit_counter = 0
+        self.n_preemptions = 0
+
+    # ----------------------------------------------------------- submit --
+    def submit(self, req: Request) -> None:
+        if not self.kv.fits_alone(req.target_len):
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds serving capacity "
+                f"(max_ctx={self.kv.sv.max_ctx}, pool={self.kv.sv.num_pages} "
+                f"pages)")
+        self.waiting.append(req)
+
+    # -------------------------------------------------------- admission --
+    def admit(self, now: float) -> List[Request]:
+        """Admit queue-head requests that have arrived and fit (a free batch
+        slot + pages for prefix and the first decode write).  FIFO: a stuck
+        head blocks later arrivals — no starvation."""
+        admitted = []
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            if req.arrival > now:
+                break
+            if not self.kv.ensure(req.rid, len(req.prefix) + 1):
+                break                        # ensure is all-or-nothing
+            self.waiting.popleft()
+            req.slot = heapq.heappop(self._free_slots)
+            req.state = RUNNING
+            req.t_admit = now
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
+            self.running[req.rid] = req
+            admitted.append(req)
+        return admitted
+
+    # -------------------------------------------------------- preemption --
+    def _preempt(self, victim: Request) -> None:
+        self.kv.release(victim.rid)
+        heapq.heappush(self._free_slots, victim.slot)
+        del self.running[victim.rid]
+        victim.slot = -1
+        victim.state = WAITING
+        victim.n_cached = 0
+        victim.n_preempts += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(victim)   # resumes before new arrivals
+
+    def ensure_decode(self) -> List[Request]:
+        """Guarantee every running request has a page for this step's KV
+        write; evict latest-admitted requests until the survivors fit.
+        Returns the preempted requests."""
+        preempted = []
+        for req in sorted(self.running.values(), key=lambda r: r.admit_seq):
+            while req.rid in self.running \
+                    and not self.kv.ensure(req.rid, req.n_cached + 1):
+                victim = max(self.running.values(), key=lambda r: r.admit_seq)
+                if victim is req and len(self.running) == 1:
+                    raise RuntimeError(
+                        f"request {req.rid} cannot fit alone "
+                        f"(n_cached={req.n_cached}); pool too small")
+                self._preempt(victim)
+                preempted.append(victim)
+        return preempted
+
+    # ------------------------------------------------------------ finish --
+    def finish(self, req: Request, now: float) -> None:
+        self.kv.release(req.rid)
+        heapq.heappush(self._free_slots, req.slot)
+        del self.running[req.rid]
+        req.slot = -1
+        req.state = FINISHED
+        req.t_finish = now
+
+    # ------------------------------------------------------------- batch --
+    def batch(self) -> List[Request]:
+        """The decode batch: running requests in slot order."""
+        return sorted(self.running.values(), key=lambda r: r.slot)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and not self.running
