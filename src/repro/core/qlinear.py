@@ -9,9 +9,12 @@ backend is selected by `QuantConfig.backend`:
   int_sim     -- W4A4 integer GEMM in XLA (int8 dot, int32 accum, dequant
                  epilogue): identical math to kernels/int4_matmul.py, usable
                  inside multi-device pjit graphs (dry-run / CPU).
-  pallas_int4 -- kernels.ops.int4_matmul (real TPU path / interpret tests).
-  w4a16       -- weight-only serving: kernels.ops.w4a16_matmul (or its XLA
-                 twin inside pjit graphs).
+  pallas_int4 -- kernels.ops.int4_matmul_fused: quantize + int8-MXU matmul +
+                 dequant in one pallas_call (real TPU path; XLA twin math
+                 on CPU/GPU — see kernels.ops dispatch).
+  w4a16       -- weight-only serving: kernels.ops.w4a16_matmul (activation-
+                 dtype MXU contraction, scales in the epilogue; XLA twin
+                 elsewhere).  Tile shapes come from kernels.autotune.
   netlist     -- bit-exact FPGA-netlist simulation of every 4-bit product
                  (the paper's circuit, used as the end-to-end oracle; O(bits)
                  slower, tests / tiny shapes only).
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.packing import pack_kmajor, prepack_kmajor
 from .mult4_proposed import build_proposed_mult4
 from .quant import (
     fake_quant,
@@ -68,6 +72,7 @@ def qdense(
     x: jnp.ndarray,                 # [..., K]
     cfg: QuantConfig,
     bias: Optional[jnp.ndarray] = None,
+    tag: str = "",
 ) -> jnp.ndarray:
     """Quantized dense layer. Output dtype follows x.
 
@@ -76,9 +81,15 @@ def qdense(
     the paper's area argument at system level.  Packed backends:
     `w4a16_packed` (dequant + bf16 GEMM) and `w4a4_packed` (dynamic per-token
     int4 activations + int8 GEMM + int32 accum, the full technique).
+
+    `tag` names the call site (e.g. "ffn.w_in"): it keys per-deployment-shape
+    tile tuning in `kernels.autotune`, so the same GEMM shape can carry
+    different tuned blocks at different sites.  Kernel-backed GEMMs run
+    through the Pallas kernels on TPU and their XLA twins elsewhere
+    (`ops` dispatch) — identical math either way.
     """
     if isinstance(w, dict) and "packed" in w:
-        return _qdense_packed(w, x, cfg, bias)
+        return _qdense_packed(w, x, cfg, bias, tag)
     if cfg.backend in ("w4a4_packed", "w4a16_packed"):
         # weight not packed (too small / excluded by pack_tree): equivalent
         # on-the-fly path
@@ -94,23 +105,37 @@ def qdense(
         y = jnp.einsum("...k,kn->...n", xq, wq.astype(x.dtype))
     elif cfg.backend in ("int_sim", "pallas_int4"):
         x2, lead = _flatten_batch(x.astype(jnp.float32))
-        a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)   # per-row dynamic
-        a_q = quantize(x2, a_scale, bits=cfg.a_bits)
         w_scale = quant_scale(w, axis=0, bits=cfg.w_bits)    # [1, N]
         w_q = quantize(w, w_scale, bits=cfg.w_bits)
-        if cfg.backend == "pallas_int4":
-            y = ops.int4_matmul(a_q, a_scale, pack_int4(w_q, -1), w_scale)
+        # the Pallas kernels are int4-specific; other bit widths keep the
+        # XLA path so cfg.a_bits/w_bits are honored on every backend
+        if cfg.backend == "pallas_int4" and ops.use_pallas() \
+                and cfg.a_bits == 4 and cfg.w_bits == 4:
+            # quantize + matmul + dequant in one pallas_call; the weight is
+            # packed K-major directly from the quantized master (no
+            # interleaved round-trip)
+            y = ops.int4_matmul_fused_kmajor(
+                x2, pack_kmajor(w_q), w_scale, tag=tag)
         else:
+            a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)  # per-row
+            a_q = quantize(x2, a_scale, bits=cfg.a_bits)
             acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
             y = acc.astype(jnp.float32) * a_scale * w_scale
         y = y.reshape(*lead, w.shape[1])
     elif cfg.backend == "w4a16":
-        from .quant import group_quantize
+        from .quant import group_dequantize, group_quantize
 
         x2, lead = _flatten_batch(x)
         g = cfg.group_size if cfg.group_size else w.shape[0]
         w_q, w_scale = group_quantize(w, g, bits=cfg.w_bits)
-        y = ops.w4a16_matmul(x2, pack_int4(w_q, -1), w_scale, g)
+        if ops.use_pallas() and cfg.w_bits == 4:
+            rm = 2 * g if w_scale.ndim == 3 else 2
+            y = ops.w4a16_matmul_kmajor(x2, pack_kmajor(w_q, rm), w_scale, g,
+                                        tag=tag)
+        else:
+            wf = group_dequantize(w_q, w_scale, g)
+            y = jnp.dot(x2.astype(jnp.float32), wf,
+                        preferred_element_type=jnp.float32)
         y = y.reshape(*lead, w.shape[1])
     elif cfg.backend == "netlist":
         y = _netlist_matmul(w, x, cfg)
@@ -148,17 +173,43 @@ def pack_params(w: jnp.ndarray, cfg: QuantConfig):
     return pack_int4(w_q, axis=-1), w_scale
 
 
-def _qdense_packed(w, x, cfg: QuantConfig, bias):
+def _qdense_packed(w, x, cfg: QuantConfig, bias, tag: str = ""):
+    """Serving path: `w` from pack_tree / pack_weight_nd.
+
+    On Pallas backends the GEMM runs through the kernels (W4A4: fused
+    activation-quantize; W4A16: per-channel epilogue kernel) using the
+    `packed_km` planar weight when `prepack_tree` added one (else the
+    interleaved weight is relayouted in-graph).  Elsewhere: XLA twins."""
     out_dtype = x.dtype
     packed, w_scale = w["packed"], w["scale"]
+    # packed weights are int4 by pack_tree construction; int_sim keeps its
+    # documented pure-XLA/pjit contract even on Pallas backends, and
+    # non-int4 activation configs keep the XLA path (a_bits honored)
+    kernel_ok = ops.use_pallas() and packed.ndim == 2
     if cfg.backend in ("w4a4_packed", "int_sim", "pallas_int4"):
         x2, lead = _flatten_batch(x.astype(jnp.float32))
-        a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)
-        a_q = quantize(x2, a_scale, bits=cfg.a_bits)
-        w_q = unpack_int4(packed, axis=-1)
-        acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
-        y = acc.astype(jnp.float32) * a_scale * w_scale
-        y = y.reshape(*lead, w_q.shape[1])
+        if kernel_ok and cfg.backend != "int_sim" and cfg.a_bits == 4:
+            w_km = w.get("packed_km")
+            if w_km is None:
+                w_km = prepack_kmajor(packed)
+            y = ops.int4_matmul_fused_kmajor(x2, w_km, w_scale, tag=tag)
+            n_out = w_km.shape[1]
+        else:
+            a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)
+            a_q = quantize(x2, a_scale, bits=cfg.a_bits)
+            w_q = unpack_int4(packed, axis=-1)
+            acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+            y = acc.astype(jnp.float32) * a_scale * w_scale
+            n_out = w_q.shape[1]
+        y = y.reshape(*lead, n_out)
+    elif kernel_ok:                     # w4a16_packed through the kernel
+        x2, lead = _flatten_batch(x)
+        w_km = w.get("packed_km")
+        if w_km is None:
+            w_km = prepack_kmajor(packed)
+        # pack_weight_nd scales are per-output-channel [1, N]
+        y = ops.w4a16_matmul_kmajor(x2, w_km, w_scale, x2.shape[1], tag=tag)
+        y = y.reshape(*lead, w_km.shape[1])
     else:                               # w4a16_packed: dequant + bf16 GEMM
         w_q = unpack_int4(packed, axis=-1)
         wf = (w_q.astype(jnp.float32) * w_scale).astype(x.dtype)
@@ -184,6 +235,31 @@ def pack_weight_nd(w: jnp.ndarray, cfg: QuantConfig):
     scale = quant_scale(w, axis=-2, bits=cfg.w_bits)          # [..., 1, N]
     q = quantize(w, scale, bits=cfg.w_bits)
     return {"packed": pack_int4(q, axis=-1), "scale": scale}
+
+
+def prepack_tree(params):
+    """Add a `packed_km` planar K-major twin to every packed serving weight
+    (see kernels/packing.py).  One-time, serving-side: the Pallas kernels
+    then unpack with a shift/mask only — no per-step relayout.  No-op on
+    unpacked leaves; safe to call on any pack_tree output.
+
+    MoE expert weights are skipped: they run through the batched einsum in
+    models/moe.py, never the 2D kernels, so a twin would just double their
+    footprint for the whole serving lifetime."""
+    import jax
+
+    from repro.kernels.packing import nmajor_to_kmajor
+
+    def maybe(path, d):
+        in_experts = any(
+            str(getattr(p, "key", "")) == "experts" for p in path)
+        if isinstance(d, dict) and "packed" in d and "packed_km" not in d \
+                and not in_experts:
+            return {**d, "packed_km": nmajor_to_kmajor(d["packed"])}
+        return d
+
+    return jax.tree_util.tree_map_with_path(
+        maybe, params, is_leaf=lambda n: isinstance(n, dict) and "packed" in n)
 
 
 def pack_tree(params, cfg: QuantConfig, min_size: int = 1 << 12):

@@ -1,9 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spot: low-bit multiplication.
 
 lut_mul4      -- the paper's LUT mechanism re-homed to VMEM (onehot/take)
-int4_matmul   -- W4A4 packed-nibble MXU matmul with fused dequant epilogue
-w4a16_matmul  -- weight-only int4 serving matmul with per-group scales
-ops           -- jit'd wrappers (+ pure-XLA equivalents for dry-runs)
+int4_matmul   -- W4A4 planar-nibble MXU matmul (+ fused activation-quantize
+                 variant) with fused dequant epilogue
+w4a16_matmul  -- weight-only int4 serving matmul, activation-dtype MXU
+                 contraction with scales folded into the epilogue
+packing       -- shared nibble pack/unpack layer (interleaved serialization
+                 vs planar K-major kernel layout) + prepacked-weight cache
+autotune      -- per-shape (bm, bn, bk) tile search with an on-disk cache
+ops           -- public wrappers: layout conversion, block lookup, dispatch
+                 (Pallas on TPU, interpreter for tests, XLA twin elsewhere)
 ref           -- pure-jnp oracles
 """
-from . import ops, ref  # noqa: F401
+from . import autotune, ops, packing, ref  # noqa: F401

@@ -1,0 +1,211 @@
+"""Block-size (bm, bn, bk) autotuner for the quantized-GEMM Pallas kernels.
+
+The paper's FPGA argument — the same exact multiplier, specialized to the
+fabric — translates on TPU to tile shapes specialized per deployment GEMM
+shape.  This module owns that specialization:
+
+  * ``get_blocks(op, M, K, N, ...)`` — the lookup every call site (qdense,
+    and through it models/ffn.py, models/attention.py and the serving
+    engine) goes through instead of hard-coded tiles.  Returns the tuned
+    entry when one exists, else a shape-clipped heuristic default.  Never
+    triggers a search by itself: lookups happen inside jit traces and must
+    stay cheap and deterministic.
+  * ``tune(...)`` — the timed search.  Run explicitly (``benchmarks/run.py
+    kernels`` on a TPU host, or ``REPRO_AUTOTUNE=1``); results persist to an
+    on-disk JSON cache keyed by (op, shape, dtype, group size, backend).
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
+ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+
+# in-memory mirror of the on-disk cache: key -> {"bm","bn","bk","us"}
+_CACHE: Dict[str, Dict] = {}
+_LOADED_FROM: Optional[str] = None
+
+
+def cache_path() -> str:
+    env = os.environ.get(ENV_CACHE_PATH)
+    if env:
+        return os.path.expanduser(env)
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def cache_key(op: str, M: int, K: int, N: int, dtype: str,
+              group_size: int = 0, backend: str = "", tag: str = "") -> str:
+    backend = backend or jax.default_backend()
+    key = f"{op}|m{M}|k{K}|n{N}|{dtype}|g{group_size}|{backend}"
+    return f"{key}|{tag}" if tag else key
+
+
+def reset() -> None:
+    """Drop in-memory state (tests; cache file is untouched)."""
+    global _LOADED_FROM
+    _CACHE.clear()
+    _LOADED_FROM = None
+
+
+def load_cache(path: Optional[str] = None) -> int:
+    """Merge the on-disk cache into memory; returns #entries loaded.
+    A missing or corrupt file is an empty cache, never an error."""
+    global _LOADED_FROM
+    path = path or cache_path()
+    _LOADED_FROM = path
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return 0
+    if not isinstance(data, dict):
+        return 0
+    n = 0
+    for key, entry in data.items():
+        if isinstance(entry, dict) and {"bm", "bn", "bk"} <= set(entry):
+            _CACHE[key] = entry
+            n += 1
+    return n
+
+
+def save_cache(path: Optional[str] = None) -> str:
+    path = path or cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(_CACHE, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def ensure_loaded() -> None:
+    if _LOADED_FROM is None:
+        load_cache()
+
+
+# ----------------------------------------------------------- heuristics ----
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def default_blocks(M: int, K: int, N: int, group_size: int = 0) -> Dict[str, int]:
+    """Shape-clipped MXU-aligned defaults.
+
+    Constraints the kernels require: bk even (planar halves), and for
+    grouped w4a16 scales bk a multiple of 2*group_size (each planar half of
+    a k-step covers whole scale groups).  bm tracks small M (decode is
+    M=1..batch; a 128-row tile would be >90% padding).
+    """
+    bm = 128 if M >= 128 else max(8, _round_up(M, 8))
+    bn = 128
+    step = 2 * group_size if group_size else 2
+    bk = min(512, _round_up(K, step))
+    bk = max(step, _round_up(bk, step))
+    return {"bm": bm, "bn": bn, "bk": bk}
+
+
+def candidate_blocks(M: int, K: int, N: int, group_size: int = 0
+                     ) -> List[Dict[str, int]]:
+    """Small MXU-aligned search space, constraint-filtered and deduped."""
+    step = 2 * group_size if group_size else 2
+    bms = sorted({b for b in (32, 64, 128, 256) if b <= _round_up(max(M, 8), 8)}
+                 | {default_blocks(M, K, N, group_size)["bm"]})
+    bns = [b for b in (128, 256) if b <= _round_up(N, 128)] or [128]
+    bks = sorted({max(step, _round_up(min(b, K), step))
+                  for b in (128, 256, 512, 1024)})
+    out, seen = [], set()
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                key = (bm, bn, bk)
+                if key not in seen:
+                    seen.add(key)
+                    out.append({"bm": bm, "bn": bn, "bk": bk})
+    return out
+
+
+# --------------------------------------------------------------- lookup ----
+def get_blocks(op: str, M: int, K: int, N: int, dtype: str,
+               group_size: int = 0, tag: str = "") -> Dict[str, int]:
+    """Tuned blocks for this GEMM if cached (site-tagged entry first, then
+    the shape-generic one), else heuristic defaults.  Cheap + pure: safe to
+    call during jit tracing."""
+    ensure_loaded()
+    for key in ((cache_key(op, M, K, N, dtype, group_size, tag=tag),)
+                if tag else ()) + (cache_key(op, M, K, N, dtype, group_size),):
+        hit = _CACHE.get(key)
+        if hit is not None:
+            return {"bm": int(hit["bm"]), "bn": int(hit["bn"]),
+                    "bk": int(hit["bk"])}
+    return default_blocks(M, K, N, group_size)
+
+
+def should_tune() -> bool:
+    """Opt-in gate for implicit tuning: TPU hosts or REPRO_AUTOTUNE=1."""
+    env = os.environ.get(ENV_AUTOTUNE)
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------- search ----
+def _default_timer(fn: Callable[[], object], reps: int = 3,
+                   warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def tune(op: str, make_call: Callable[[Dict[str, int]], Callable[[], object]],
+         M: int, K: int, N: int, dtype: str, *,
+         group_size: int = 0, tag: str = "",
+         candidates: Optional[Iterable[Dict[str, int]]] = None,
+         timer: Callable[[Callable[[], object]], float] = _default_timer,
+         path: Optional[str] = None, save: bool = True
+         ) -> Tuple[Dict[str, int], float]:
+    """Time `make_call(blocks)()` over the candidate set, persist the best.
+
+    `make_call` binds the kernel arguments and returns a zero-arg callable
+    (one jit signature per block shape).  A candidate that fails to compile
+    or run is skipped, not fatal.  Returns (best_blocks, best_us).
+    """
+    ensure_loaded()
+    cands = list(candidates) if candidates is not None \
+        else candidate_blocks(M, K, N, group_size)
+    best, best_us = None, float("inf")
+    for blocks in cands:
+        try:
+            us = timer(make_call(blocks))
+        except Exception:                  # unsupported tile on this backend
+            continue
+        if us < best_us:
+            best, best_us = blocks, us
+    if best is None:
+        # every candidate failed: fall back to defaults but do NOT persist —
+        # float("inf") is not valid JSON and a dead entry would shadow a
+        # future successful search
+        return default_blocks(M, K, N, group_size), float("inf")
+    entry = {**best, "us": best_us}
+    _CACHE[cache_key(op, M, K, N, dtype, group_size, tag=tag)] = entry
+    if tag:                                # untagged key serves other sites
+        _CACHE.setdefault(cache_key(op, M, K, N, dtype, group_size), entry)
+    if save:
+        save_cache(path)
+    return best, best_us

@@ -4,15 +4,26 @@ re-architected for the MXU.
 Hardware adaptation (DESIGN.md §2): on 7-series the win is LUT packing; on TPU
 the win is (a) int4 *storage* packing — two weights per byte, 4x fewer HBM
 bytes than bf16 — and (b) feeding the int8 MXU path (2x bf16 peak) with int32
-accumulation, which replaces the CARRY4 chains.  The kernel:
+accumulation, which replaces the CARRY4 chains.
+
+Weights use the planar K-major layout (`kernels/packing.py`): the low nibbles
+of a [bk/2, bn] uint8 tile ARE contraction rows [k0, k0+bk/2) and the high
+nibbles ARE rows [K/2+k0, ...), so the in-kernel unpack is a shift/mask with
+no stack/reshape relayout, and the two planar halves are two int8 MXU dots
+accumulating into the same tile (the activation is split at K/2 to match).
 
   grid (M/bm, N/bn, K/bk), K innermost:
     k == 0     : zero the accumulator tile
-    every k    : unpack the uint8 nibble tile -> int8 [bk, bn]; MXU dot with
-                 the int8 activation tile; accumulate (exact in f32 < 2^24)
-    k == K-1   : fuse the dequant epilogue  out *= a_scale[m] * w_scale[n]
+    every k    : shift/mask-unpack the planar tile; two int8 MXU dots
+                 (activations optionally quantized in-tile, see below)
+    k == K-1   : fused dequant epilogue  out *= a_scale[m] * w_scale[n]
 
-Block shapes default to MXU-aligned (128, 128, 512).
+Two entry points:
+  int4_matmul       -- pre-quantized int4 activations (a_q, a_scale)
+  int4_matmul_fused -- float activations: the per-row int4 quantize runs
+                       *inside* the same pallas_call (per-tile prologue), so
+                       the A4 path is quantize + matmul + dequant in one
+                       kernel and the int8 activation never round-trips HBM.
 """
 
 from __future__ import annotations
@@ -23,70 +34,80 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .packing import pad_to, unpack_nibbles
 
-def _kernel(a_ref, w_ref, as_ref, ws_ref, o_ref, *, nk: int):
+INT4_QMAX = 7.0
+
+
+def _quantize_tile(x, scale):
+    """Per-row symmetric int4 quantize: same round/clip ops as
+    core.quant.quantize on the same f32 values.
+
+    Caveat: when x/scale lands *exactly* on a .5 rounding tie (possible with
+    bf16 inputs, whose coarse grid makes exact ratios common), the fused
+    kernel may round one LSB away from the eager oracle — XLA's fast-math
+    fusion can evaluate the division as multiply-by-reciprocal, perturbing
+    the quotient by 1 ulp across the tie.  A tie is a knife-edge
+    quantization boundary; either neighbor is a valid int4 encoding."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -8, 7)
+    return q.astype(jnp.int8)
+
+
+def _kernel(alo_ref, ahi_ref, w_ref, as_ref, ws_ref, o_ref, *,
+            nk: int, fused_quant: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[...]                                           # [bm, bk] int8
-    wp = w_ref[...]                                          # [bk, bn//2] uint8
-    lo = ((wp & 0xF) ^ 8).astype(jnp.int8) - 8               # sign-extend
-    hi = (((wp >> 4) & 0xF) ^ 8).astype(jnp.int8) - 8
-    w = jnp.stack([lo, hi], axis=-1).reshape(wp.shape[0], wp.shape[1] * 2)
+    a_lo = alo_ref[...]                     # [bm, bk/2] int8 (or float)
+    a_hi = ahi_ref[...]
+    if fused_quant:
+        s = as_ref[...]                     # [bm, 1] f32
+        a_lo = _quantize_tile(a_lo, s)
+        a_hi = _quantize_tile(a_hi, s)
+    lo, hi = unpack_nibbles(w_ref[...])     # planar: [bk/2, bn] int8 each
     acc = jax.lax.dot_general(
-        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        a_lo, lo, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    ) + jax.lax.dot_general(
+        a_hi, hi, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
     )
-    o_ref[...] += acc.astype(jnp.float32)
+    o_ref[...] += acc.astype(jnp.float32)   # exact: |acc| < 2^24
 
     @pl.when(k == nk - 1)
     def _epilogue():
         o_ref[...] = o_ref[...] * as_ref[...] * ws_ref[...]
 
 
-def _pad_to(x: jnp.ndarray, mult, axis: int) -> jnp.ndarray:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+def _call(a, a_scale, w_kmajor, w_scale, *, bm, bn, bk, interpret, fused):
+    M, K = a.shape
+    N = w_kmajor.shape[1]
+    Keven = w_kmajor.shape[0] * 2
+    assert Keven in (K, K + 1), (a.shape, w_kmajor.shape)
+    a = pad_to(a, Keven, 1)                 # odd K: one zero column
+    assert bk % 2 == 0, bk
+    bkh = bk // 2
 
-
-@functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
-)
-def int4_matmul(
-    a_q: jnp.ndarray,          # [M, K] int8 holding int4 values
-    a_scale: jnp.ndarray,      # [M, 1] f32
-    w_packed: jnp.ndarray,     # [K, N//2] uint8 (packed along N)
-    w_scale: jnp.ndarray,      # [1, N] f32
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 512,
-    interpret: bool = None,
-) -> jnp.ndarray:
-    M, K = a_q.shape
-    N = w_packed.shape[1] * 2
-    assert w_packed.shape[0] == K
-
-    a_q = _pad_to(_pad_to(a_q, bm, 0), bk, 1)
-    a_scale = _pad_to(a_scale, bm, 0)
-    w_packed = _pad_to(_pad_to(w_packed, bk, 0), bn // 2, 1)
-    w_scale = _pad_to(w_scale, bn, 1)
-    Mp, Kp = a_q.shape
-    Np = w_packed.shape[1] * 2
-    nk = Kp // bk
+    K2 = Keven // 2
+    a_lo = pad_to(pad_to(a[:, :K2], bm, 0), bkh, 1)
+    a_hi = pad_to(pad_to(a[:, K2:], bm, 0), bkh, 1)
+    # pad rows get scale 1: the fused path divides by it (0 would NaN) and
+    # the epilogue multiplies garbage rows that are sliced off anyway
+    a_scale = pad_to(a_scale, bm, 0, value=1)
+    w_kmajor = pad_to(pad_to(w_kmajor, bkh, 0), bn, 1)
+    w_scale = pad_to(w_scale, bn, 1)
+    Mp = a_lo.shape[0]
+    Np = w_kmajor.shape[1]
+    nk = a_lo.shape[1] // bkh
 
     out = pl.pallas_call(
-        functools.partial(_kernel, nk=nk),
+        functools.partial(_kernel, nk=nk, fused_quant=fused),
         grid=(Mp // bm, Np // bn, nk),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkh, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
@@ -94,5 +115,40 @@ def int4_matmul(
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         interpret=(jax.default_backend() != "tpu"
                    if interpret is None else interpret),
-    )(a_q, w_packed, a_scale, w_scale)
+    )(a_lo, a_hi, w_kmajor, a_scale, w_scale)
     return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int4_matmul(
+    a_q: jnp.ndarray,          # [M, K] int8 holding int4 values
+    a_scale: jnp.ndarray,      # [M, 1] f32
+    w_kmajor: jnp.ndarray,     # [ceil(K/2), N] uint8, planar K-major
+    w_scale: jnp.ndarray,      # [1, N] f32
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = None,
+) -> jnp.ndarray:
+    return _call(a_q, a_scale, w_kmajor, w_scale,
+                 bm=bm, bn=bn, bk=bk, interpret=interpret, fused=False)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def int4_matmul_fused(
+    x: jnp.ndarray,            # [M, K] float activations (bf16/f32)
+    w_kmajor: jnp.ndarray,     # [ceil(K/2), N] uint8, planar K-major
+    w_scale: jnp.ndarray,      # [1, N] f32
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = None,
+) -> jnp.ndarray:
+    """Fused activation-quantize A4 path: per-row scales are a cheap [M, K]
+    reduction outside; round/clip/int8-cast + both MXU dots + the dequant
+    epilogue all run in one pallas_call."""
+    x32 = x.astype(jnp.float32)
+    a_scale = jnp.maximum(jnp.max(jnp.abs(x32), axis=1, keepdims=True),
+                          1e-8) / INT4_QMAX
+    return _call(x32, a_scale, w_kmajor, w_scale,
+                 bm=bm, bn=bn, bk=bk, interpret=interpret, fused=True)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .packing import flatten_to_tiles
 from .ref import make_product_lut
 
 # VPU-aligned tile: 8 sublanes x 128 lanes.
@@ -70,17 +71,11 @@ def lut_mul4(
         interpret = jax.default_backend() != "tpu"
     assert a_q.shape == b_q.shape
     shape = a_q.shape
-    n = 1
-    for s in shape:
-        n *= s
-    bm, bn = block
-    cols = bn
-    rows = -(-n // cols)
-    rows_padded = -(-rows // bm) * bm
-    a2 = jnp.zeros((rows_padded * cols,), jnp.int8).at[:n].set(a_q.reshape(-1))
-    b2 = jnp.zeros((rows_padded * cols,), jnp.int8).at[:n].set(b_q.reshape(-1))
-    a2 = a2.reshape(rows_padded, cols)
-    b2 = b2.reshape(rows_padded, cols)
+    bm, cols = block
+    # shared flatten/pad helper: one jnp.pad, not an O(n) zeros+scatter copy
+    a2, n = flatten_to_tiles(a_q, bm, cols)
+    b2, _ = flatten_to_tiles(b_q, bm, cols)
+    rows_padded = a2.shape[0]
     lut = jnp.asarray(make_product_lut())
 
     kernel = _kernel_onehot if strategy == "onehot" else _kernel_take

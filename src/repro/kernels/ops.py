@@ -1,10 +1,24 @@
-"""Public jit'd entry points for the kernels, with CPU-interpret fallback.
+"""Public entry points for the kernels: layout conversion, block-size
+lookup, and backend dispatch in one place.
 
-On a real TPU runtime, pass ``interpret=False`` (or set
-``REPRO_PALLAS_INTERPRET=0``) and the kernels lower through Mosaic; in this
-container everything is validated through the Pallas interpreter.  The `xla_*`
-functions are the pure-XLA equivalents used inside full-model dry-runs (Pallas
-TPU kernels cannot lower on the CPU backend).
+Dispatch (the `interpret` argument):
+
+  True   -- Pallas kernel through the interpreter (kernel-body tests on CPU)
+  False  -- Pallas kernel compiled through Mosaic (TPU)
+  None   -- ``REPRO_PALLAS_INTERPRET`` env if set ("0" => compile,
+            anything else => interpret); otherwise Pallas-Mosaic on TPU and
+            the pure-XLA twin elsewhere.  The interpreter is a debugging
+            tool, not an execution path: on CPU/GPU the XLA twin is the
+            same math at full XLA speed.
+
+Weight layout: callers pass the *serialized* interleaved N-packed format
+(``core.quant.pack_int4``, [K, N//2]); the wrappers convert to the kernels'
+planar K-major layout through ``packing.prepack_kmajor`` (cached per
+concrete array).  Call sites that already hold K-major weights (qdense
+quantizing a float master inline) use the ``*_kmajor`` entry points.
+
+Block sizes: resolved per GEMM shape through ``kernels.autotune`` unless
+explicitly overridden (bm=/bn=/bk= kwargs).
 """
 
 from __future__ import annotations
@@ -13,40 +27,160 @@ import os
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
-from . import ref
+from . import autotune, packing, ref
 from .int4_matmul import int4_matmul as _int4_matmul
+from .int4_matmul import int4_matmul_fused as _int4_matmul_fused
 from .lut_mul4 import lut_mul4 as _lut_mul4
 from .w4a16_matmul import w4a16_matmul as _w4a16_matmul
 
+_PALLAS, _INTERPRET, _XLA = "pallas", "interpret", "xla"
 
-def _default_interpret(flag: Optional[bool]) -> bool:
-    if flag is not None:
-        return flag
+
+def _mode(interpret: Optional[bool]) -> str:
+    if interpret is True:
+        return _INTERPRET
+    if interpret is False:
+        return _PALLAS
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+        return _PALLAS if env in ("0", "false", "False") else _INTERPRET
+    return _PALLAS if jax.default_backend() == "tpu" else _XLA
 
 
-def mul4(a_q, b_q, strategy: str = "onehot", interpret: Optional[bool] = None):
-    """Elementwise exact int4 product (Pallas)."""
+def use_pallas(interpret: Optional[bool] = None) -> bool:
+    """True when the Pallas kernels (compiled or interpreted) would run."""
+    return _mode(interpret) != _XLA
+
+
+def _blocks(op: str, M: int, K: int, N: int, dtype, group_size: int,
+            tag: str, overrides: dict) -> dict:
+    b = autotune.get_blocks(op, M, K, N, jnp.dtype(dtype).name,
+                            group_size=group_size, tag=tag)
+    b.update({k: v for k, v in overrides.items() if v is not None})
+    return b
+
+
+def mul4(a_q, b_q, strategy: str = "onehot",
+         interpret: Optional[bool] = None):
+    """Elementwise exact int4 product."""
+    m = _mode(interpret)
+    if m == _XLA:
+        return ref.mul4_ref(a_q, b_q)
     return _lut_mul4(a_q, b_q, strategy=strategy,
-                     interpret=_default_interpret(interpret))
+                     interpret=m == _INTERPRET)
 
 
 def int4_matmul(a_q, a_scale, w_packed, w_scale,
-                interpret: Optional[bool] = None, **blocks):
-    """W4A4 matmul with fused dequant epilogue (Pallas)."""
-    return _int4_matmul(a_q, a_scale, w_packed, w_scale,
-                        interpret=_default_interpret(interpret), **blocks)
+                interpret: Optional[bool] = None, tag: str = "",
+                bm=None, bn=None, bk=None):
+    """W4A4 matmul with fused dequant epilogue.
+
+    `w_packed`: serialized interleaved [K, N//2] (``core.quant.pack_int4``).
+    """
+    m = _mode(interpret)
+    if m == _XLA:
+        return ref.int4_matmul_ref(a_q, a_scale, w_packed, w_scale)
+    return int4_matmul_kmajor(
+        a_q, a_scale, packing.prepack_kmajor(w_packed), w_scale,
+        interpret=m == _INTERPRET, tag=tag, bm=bm, bn=bn, bk=bk)
+
+
+def int4_matmul_kmajor(a_q, a_scale, w_kmajor, w_scale,
+                       interpret: Optional[bool] = None, tag: str = "",
+                       bm=None, bn=None, bk=None):
+    """W4A4 matmul on planar K-major weights ([ceil(K/2), N] uint8)."""
+    m = _mode(interpret)
+    if m == _XLA:
+        w_q = packing.unpack_kmajor(w_kmajor)[: a_q.shape[1]]
+        acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * a_scale * w_scale
+    M, K = a_q.shape
+    b = _blocks("int4_matmul", M, K, w_kmajor.shape[1], a_q.dtype, 0, tag,
+                {"bm": bm, "bn": bn, "bk": bk})
+    return _int4_matmul(a_q, a_scale, w_kmajor, w_scale,
+                        interpret=m == _INTERPRET, **b)
+
+
+def int4_matmul_fused(x, w_packed, w_scale,
+                      interpret: Optional[bool] = None, tag: str = "",
+                      bm=None, bn=None, bk=None):
+    """Fused activation-quantize W4A4: float x in, quantize + matmul +
+    dequant in one pallas_call (A4 activations never round-trip HBM)."""
+    m = _mode(interpret)
+    if m == _XLA:
+        return ref.int4_matmul_fused_ref(x, w_packed, w_scale)
+    return int4_matmul_fused_kmajor(
+        x, packing.prepack_kmajor(w_packed), w_scale,
+        interpret=m == _INTERPRET, tag=tag, bm=bm, bn=bn, bk=bk)
+
+
+def int4_matmul_fused_kmajor(x, w_kmajor, w_scale,
+                             interpret: Optional[bool] = None, tag: str = "",
+                             bm=None, bn=None, bk=None):
+    m = _mode(interpret)
+    if m == _XLA:
+        # kmajor-holding caller on a non-Pallas backend (e.g. qdense traced
+        # on CPU): same math through the XLA twin
+        a_q, a_scale = _quantize_rows(x)
+        w_q = packing.unpack_kmajor(w_kmajor)[: x.shape[1]]
+        acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * a_scale * w_scale
+    M, K = x.shape
+    b = _blocks("int4_matmul_fused", M, K, w_kmajor.shape[1], x.dtype, 0,
+                tag, {"bm": bm, "bn": bn, "bk": bk})
+    return _int4_matmul_fused(x, w_kmajor, w_scale,
+                              interpret=m == _INTERPRET, **b)
 
 
 def w4a16_matmul(x, w_packed, w_scale, group_size: int,
-                 interpret: Optional[bool] = None, **blocks):
-    """Weight-only int4 matmul with per-group dequant (Pallas)."""
-    return _w4a16_matmul(x, w_packed, w_scale, group_size,
-                         interpret=_default_interpret(interpret), **blocks)
+                 interpret: Optional[bool] = None, tag: str = "",
+                 bm=None, bn=None, bk=None):
+    """Weight-only int4 matmul with per-group dequant.
+
+    `w_packed`: serialized interleaved [K, N//2] (``core.quant.pack_int4``).
+    """
+    m = _mode(interpret)
+    if m == _XLA:
+        return ref.w4a16_matmul_ref(x, w_packed, w_scale, group_size)
+    # grouped scales: align K to 2*G at repack time so each planar half
+    # covers whole groups (padding rows are zero int4 values)
+    row_mult = 2 * group_size if w_scale.ndim == 3 else 2
+    return w4a16_matmul_kmajor(
+        x, packing.prepack_kmajor(w_packed, row_mult), w_scale, group_size,
+        interpret=m == _INTERPRET, tag=tag, bm=bm, bn=bn, bk=bk)
+
+
+def w4a16_matmul_kmajor(x, w_kmajor, w_scale, group_size: int,
+                        interpret: Optional[bool] = None, tag: str = "",
+                        bm=None, bn=None, bk=None):
+    """W4A16 matmul on planar K-major weights ([ceil(K/2), N] uint8)."""
+    m = _mode(interpret)
+    if m == _XLA:
+        w_q = packing.unpack_kmajor(w_kmajor)[: x.shape[1]]
+        K, N = w_q.shape
+        if w_scale.ndim == 2:
+            w = w_q.astype(jnp.float32) * w_scale
+        else:
+            wg = w_q.reshape(K // group_size, group_size, N)
+            w = (wg.astype(jnp.float32) * w_scale).reshape(K, N)
+        return jnp.dot(x.astype(jnp.float32), w,
+                       preferred_element_type=jnp.float32)
+    M, K = x.shape
+    g = 0 if w_scale.ndim == 2 else group_size
+    b = _blocks("w4a16_matmul", M, K, w_kmajor.shape[1], x.dtype, g, tag,
+                {"bm": bm, "bn": bn, "bk": bk})
+    return _w4a16_matmul(x, w_kmajor, w_scale, group_size,
+                         interpret=m == _INTERPRET, **b)
+
+
+def _quantize_rows(x):
+    from repro.core.quant import quant_scale, quantize
+
+    x32 = x.astype(jnp.float32)
+    a_scale = quant_scale(x32, axis=1, bits=4)
+    return quantize(x32, a_scale, bits=4), a_scale
 
 
 # --- pure-XLA equivalents (identical math; used in multi-device dry-runs) ---

@@ -1,0 +1,148 @@
+"""Shared nibble pack/unpack layer for the quantized-GEMM kernels.
+
+Two storage layouts for int4 tensors (two values per uint8 byte):
+
+  * interleaved N-packed (``core.quant.pack_int4``): adjacent *columns*
+    share a byte.  This is the serialization format (checkpoints,
+    ``pack_tree`` serving weights) — compact and axis-generic, but the
+    in-kernel unpack needs a stack+reshape interleave, which Mosaic lowers
+    as a lane-axis relayout on the matmul critical path.
+  * planar K-major (``pack_kmajor``): contraction rows ``k`` and
+    ``k + K/2`` share a byte.  The low nibbles of a ``[K/2, N]`` tile *are*
+    rows ``[0, K/2)`` and the high nibbles *are* rows ``[K/2, K)`` — the
+    in-kernel unpack is a shift/mask with **no relayout**, and the two
+    planar halves feed two MXU dots that accumulate into the same tile.
+
+``prepack_kmajor`` converts serialized weights to the kernel layout once
+per concrete array (cache keyed by ``id()``, weakref-evicted), so a serving
+loop that calls the kernels every step with the same weight pays the
+relayout exactly once instead of per call.
+
+This module is self-contained (no repro imports): it is the single home of
+the sign-extend / shift-mask helpers that used to be copy-pasted between
+``int4_matmul.py`` and ``w4a16_matmul.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import weakref
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to(x: jnp.ndarray, mult: int, axis: int, value=0) -> jnp.ndarray:
+    """Zero-pad (or `value`-pad) `axis` of x up to the next multiple of `mult`."""
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def sign_extend_nibble(n: jnp.ndarray) -> jnp.ndarray:
+    """Low nibble (two's complement, in [0, 16)) -> int8 in [-8, 7]."""
+    return ((n.astype(jnp.int8) ^ 8) - 8).astype(jnp.int8)
+
+
+def unpack_nibbles(p: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """uint8 -> (lo, hi) sign-extended int8, each the same shape as `p`.
+
+    The shift/mask primitive shared by every kernel; what the nibbles *mean*
+    (adjacent columns vs planar row halves) is the caller's layout contract.
+    """
+    return sign_extend_nibble(p & 0xF), sign_extend_nibble((p >> 4) & 0xF)
+
+
+def unpack_interleaved(p: jnp.ndarray) -> jnp.ndarray:
+    """Interleaved N-packed [..., K, N//2] uint8 -> [..., K, N] int8."""
+    lo, hi = unpack_nibbles(p)
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        *p.shape[:-1], p.shape[-1] * 2)
+
+
+# ------------------------------------------------------- planar K-major ----
+def pack_kmajor(q: jnp.ndarray, row_mult: int = 2) -> jnp.ndarray:
+    """[..., K, N] int8 (int4 values) -> [..., K'/2, N] uint8, planar
+    (K' = K rounded up to a multiple of `row_mult`, at least even).
+
+    Row r of the packed array holds original row r in its low nibble and
+    row r + K'/2 in its high nibble.  Padding rows are zero int4 values and
+    contribute nothing to a contraction.  Grouped-scale consumers pass
+    ``row_mult=2*group_size`` so each planar half covers whole groups.
+    """
+    q = pad_to(q, max(2, row_mult), -2)
+    half = q.shape[-2] // 2
+    lo = q[..., :half, :] & 0xF
+    hi = q[..., half:, :] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_kmajor(p: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_kmajor: [..., K/2, N] uint8 -> [..., K, N] int8."""
+    lo, hi = unpack_nibbles(p)
+    return jnp.concatenate([lo, hi], axis=-2)
+
+
+@functools.partial(jax.jit, static_argnames="row_mult")
+def nmajor_to_kmajor(w_packed: jnp.ndarray, row_mult: int = 2) -> jnp.ndarray:
+    """Serialized interleaved [..., K, N//2] -> kernel planar [..., K'/2, N]
+    (K' = K rounded up to a multiple of `row_mult`, at least even)."""
+    return pack_kmajor(unpack_interleaved(w_packed), row_mult)
+
+
+# ------------------------------------------------- prepacked-weight cache --
+# (id(src), row_mult) -> (weakref to src, kmajor-packed array).  The weakref
+# callback evicts the entry when the source weight is garbage-collected, so
+# the cache never outlives (or pins) the arrays it mirrors.
+_PREPACKED: Dict[Tuple[int, int], Tuple[weakref.ref, jnp.ndarray]] = {}
+
+
+def prepack_kmajor(w_packed: jnp.ndarray, row_mult: int = 2) -> jnp.ndarray:
+    """`nmajor_to_kmajor`, cached by array identity for concrete arrays.
+
+    Tracers (calls under an outer jit) convert inline — XLA sees the repack
+    as part of the traced graph and CSEs/hoists what it can; concrete
+    arrays (eager serving / benchmarks) repack exactly once per weight.
+    """
+    if isinstance(w_packed, jax.core.Tracer):
+        return nmajor_to_kmajor(w_packed, row_mult)
+    key = (id(w_packed), row_mult)
+    hit = _PREPACKED.get(key)
+    if hit is not None and hit[0]() is w_packed:
+        return hit[1]
+    out = jax.block_until_ready(nmajor_to_kmajor(w_packed, row_mult))
+    try:
+        ref = weakref.ref(w_packed, lambda _r, _k=key: _PREPACKED.pop(_k, None))
+    except TypeError:                      # not weakref-able: skip caching
+        return out
+    _PREPACKED[key] = (ref, out)
+    return out
+
+
+def prepack_cache_size() -> int:
+    return len(_PREPACKED)
+
+
+def clear_prepack_cache() -> None:
+    _PREPACKED.clear()
+
+
+# ------------------------------------------------------- tile flattening ---
+def flatten_to_tiles(x: jnp.ndarray, rows_mult: int, cols: int
+                     ) -> Tuple[jnp.ndarray, int]:
+    """Flatten any-shape x into a [rows, cols] tile grid, rows padded to a
+    multiple of `rows_mult` (single jnp.pad — no O(n) scatter copy).
+
+    Returns (tiles, n) where n is the original element count; undo with
+    ``tiles.reshape(-1)[:n].reshape(orig_shape)``.
+    """
+    n = x.size
+    rows = -(-n // cols)
+    rows_padded = -(-rows // rows_mult) * rows_mult
+    flat = jnp.pad(x.reshape(-1), (0, rows_padded * cols - n))
+    return flat.reshape(rows_padded, cols), n

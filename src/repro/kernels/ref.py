@@ -48,6 +48,21 @@ def int4_matmul_ref(
     return acc.astype(jnp.float32) * a_scale * w_scale
 
 
+def int4_matmul_fused_ref(
+    x: jnp.ndarray,            # [M, K] float activations
+    w_packed: jnp.ndarray,     # [K, N//2] uint8 (two int4 per byte, packed on N)
+    w_scale: jnp.ndarray,      # [1, N] f32
+) -> jnp.ndarray:
+    """Oracle for the fused activation-quantize A4 path: dynamic per-row
+    int4 quantization (same round/clip as core.quant.quantize) + W4A4."""
+    from repro.core.quant import quant_scale, quantize
+
+    x32 = x.astype(jnp.float32)
+    a_scale = quant_scale(x32, axis=1, bits=4)
+    a_q = quantize(x32, a_scale, bits=4)
+    return int4_matmul_ref(a_q, a_scale, w_packed, w_scale)
+
+
 def w4a16_matmul_ref(
     x: jnp.ndarray,            # [M, K] bf16/f32
     w_packed: jnp.ndarray,     # [K, N//2] uint8

@@ -264,9 +264,11 @@ def apply_attention(
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     qc = rt.quant_cfg(cfg)
 
-    q = qdense(params["wq"], x, qc, params.get("wq_bias"))
-    k = qdense(params["wk"], x, qc, params.get("wk_bias"))
-    v = qdense(params["wv"], x, qc, params.get("wv_bias"))
+    # tags key per-call-site tile tuning in kernels.autotune (QKV share a
+    # GEMM shape per config; wo differs)
+    q = qdense(params["wq"], x, qc, params.get("wq_bias"), tag="attn.wq")
+    k = qdense(params["wk"], x, qc, params.get("wk_bias"), tag="attn.wk")
+    v = qdense(params["wv"], x, qc, params.get("wv_bias"), tag="attn.wv")
     q = shard(q, "act_bthd")
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, KV, hd)
@@ -340,5 +342,5 @@ def apply_attention(
             new_cache["pos"] = cache["pos"] + S
 
     out = out.reshape(B, S, H * hd)
-    y = qdense(params["wo"], out, qc)
+    y = qdense(params["wo"], out, qc, tag="attn.wo")
     return shard(y, "act_btd"), new_cache

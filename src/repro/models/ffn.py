@@ -29,12 +29,14 @@ def init_ffn(key, cfg: ArchConfig, d_ff: int = 0) -> Dict:
 
 def apply_ffn(params: Dict, x: jnp.ndarray, cfg: ArchConfig, rt: Runtime) -> jnp.ndarray:
     qc = rt.quant_cfg(cfg)
-    h = qdense(params["w_in"], x, qc, params.get("b_in"))
+    # tags key per-call-site tile tuning in kernels.autotune: the up/down
+    # projections are the serving hot path and tune independently
+    h = qdense(params["w_in"], x, qc, params.get("b_in"), tag="ffn.w_in")
     if cfg.ffn_type == "swiglu":
-        g = qdense(params["w_gate"], x, qc)
+        g = qdense(params["w_gate"], x, qc, tag="ffn.w_gate")
         h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h)
     h = shard(h, "act_btf")
-    y = qdense(params["w_out"], h, qc, params.get("b_out"))
+    y = qdense(params["w_out"], h, qc, params.get("b_out"), tag="ffn.w_out")
     return shard(y, "act_btd")

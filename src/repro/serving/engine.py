@@ -29,7 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, Runtime, ServingConfig
-from repro.core.qlinear import pack_tree
+from repro.core.qlinear import pack_tree, prepack_tree
+from repro.kernels import autotune, ops
 from repro.launch.steps import make_serving_steps
 from repro.models import init_caches, init_model
 from repro.serving.kv_pages import (
@@ -44,10 +45,16 @@ from repro.serving.scheduler import Request, Scheduler
 
 
 def build_params(cfg: ArchConfig, rt: Runtime, seed: int = 0):
-    """Init (and, for packed backends, pre-pack) serving weights."""
+    """Init (and, for packed backends, pre-pack) serving weights.
+
+    On Pallas backends the packed weights also get their planar K-major
+    twin (`prepack_tree`) so the kernels' nibble unpack is shift/mask only
+    — the relayout is paid once here, never inside a serving step."""
     params = init_model(jax.random.PRNGKey(seed), cfg)
     if rt.quant_backend in ("w4a4_packed", "w4a16_packed"):
         params = pack_tree(params, rt.quant_cfg(cfg))
+        if ops.use_pallas():
+            params = prepack_tree(params)
     return params
 
 
@@ -83,6 +90,10 @@ class InferenceEngine:
             self.caches = init_caches(cfg, rt, batch=sv.max_batch,
                                       seq=sv.max_ctx)
         self.scheduler = Scheduler(self.kv, sv.max_batch)
+        # tuned (bm, bn, bk) tiles for every prefill/decode GEMM: qdense
+        # resolves blocks through kernels.autotune at trace time, so loading
+        # the cache before the first compile is all the wiring needed
+        autotune.ensure_loaded()
         self._prefill, self._decode = make_serving_steps(cfg, rt)
 
         self._next_rid = 0
