@@ -8,6 +8,8 @@ system benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   kernels  -> TPU-adaptation kernels: us/call + GOP/s vs the jnp oracle
   gemm     -> quantized-GEMM backends (the "multiplier array" system view)
   serving  -> continuous-batching engine: paged vs contiguous KV tokens/s
+  sensitivity -> per-site quant sensitivity sweep (one site group floated
+              at a time; logits-MSE vs uniform-W4 — §Mixed precision)
 
 CLI::
 
@@ -312,6 +314,25 @@ def bench_serving():
              f"preempt={stats['requests_preempted']}")
 
 
+def bench_sensitivity():
+    """Per-site quantization sensitivity sweep (reduced qwen2, 2 layers so
+    block-indexed groups have layers to differ on): flip one site group to
+    float at a time, report logits-MSE vs the full-float reference and the
+    improvement over the uniform-W4 plan.  Feeds the preset choices in
+    core.quant_plan (see EXPERIMENTS.md §Mixed precision)."""
+    from repro.configs import get_config
+    from repro.launch.sensitivity import sensitivity_sweep
+
+    cfg = get_config("qwen2-0.5b").reduced(n_layers=2)
+    out = sensitivity_sweep(cfg, seed=0)
+    emit("sensitivity.uniform_w4", 0.0,
+         f"mse={out['uniform_mse_vs_float']:.3e}")
+    for row in out["per_site"]:
+        emit(f"sensitivity.{row['site']}", 0.0,
+             f"mse={row['mse_vs_float']:.3e};"
+             f"delta={row['delta_vs_uniform']:.3e}")
+
+
 def _gate_rows(rows: dict, base: dict):
     """(name, base_us, cur_us) for every row both sides can gate on."""
     out = []
@@ -371,6 +392,7 @@ SECTIONS = {
     "kernels": bench_kernels,
     "gemm": bench_gemm_backends,
     "serving": bench_serving,
+    "sensitivity": bench_sensitivity,
 }
 
 

@@ -1,8 +1,16 @@
-"""Serve a small model under continuous batching with packed-int4 weights —
-the paper's deployment scenario (dense arrays of 4-bit multipliers for edge
-inference).  Compares W4A4-packed against bf16 serving on the same Poisson
-request trace, then stacks the int8 KV cache on top (decode memory-term
-lever).
+"""Serve a small model under mixed-precision quantization plans and from
+quantized checkpoints — the paper's deployment scenario (dense arrays of
+4-bit multipliers for edge inference), deployed the way real systems do it:
+sensitive sites (lm_head, block 0 attention) keep higher precision while
+the bulk runs W4.
+
+Three acts:
+  1. uniform plans: bf16 vs weight-only int4 vs full W4A4 on one trace;
+  2. mixed plans: the `w4a16_sensitive_fp` / `mixed_sensitive` presets and
+     an inline plan string, via `--quant-plan` semantics;
+  3. quantized checkpoints: save packed nibbles + scales + plan, restore
+     with no float master, and verify the restored tree serves bit-identical
+     logits/tokens vs the same plan applied to float masters.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -10,23 +18,38 @@ lever).
 from repro.launch.serve import serve
 
 
+def show(tag, out):
+    print(f"{tag:22s} decode={out['tokens_per_s']:6.1f} tok/s "
+          f"p50={out['latency_p50_s']*1e3:7.1f} ms "
+          f"p95={out['latency_p95_s']*1e3:7.1f} ms")
+
+
 def main():
-    common = dict(reduced=True, layout="paged", max_batch=4, requests=6,
-                  rate=0.5, prompt_lens=(8, 16), gen_lens=(8,),
+    common = dict(reduced=True, layers=2, layout="paged", max_batch=4,
+                  requests=6, rate=0.5, prompt_lens=(8, 16), gen_lens=(8,),
                   page_size=8, num_pages=48, max_ctx=64)
-    for quant in ("float", "w4a16_packed", "w4a4_packed"):
-        out = serve("qwen2-0.5b", quant_backend=quant, **common)
-        print(f"{quant:14s} decode={out['tokens_per_s']:6.1f} tok/s "
-              f"p50={out['latency_p50_s']*1e3:7.1f} ms "
-              f"p95={out['latency_p95_s']*1e3:7.1f} ms")
-    out = serve("qwen2-0.5b", quant_backend="w4a4_packed",
-                cache_dtype="int8", **common)
-    print(f"{'w4a4+int8kv':14s} decode={out['tokens_per_s']:6.1f} tok/s "
-          f"p50={out['latency_p50_s']*1e3:7.1f} ms")
-    # paged vs contiguous KV must agree bit-for-bit on the same trace
-    out = serve("qwen2-0.5b", quant_backend="w4a4_packed",
-                **{**common, "layout": "compare"})
-    print("serving OK; paged == contiguous:", out["bit_identical"])
+
+    # -- 1. uniform plans (the legacy backend strings map onto these) -------
+    for plan in ("*=float", "*=w4a16_packed;lm_head=float", "serve_w4a4"):
+        show(plan, serve("qwen2-0.5b", quant_plan=plan, **common))
+
+    # -- 2. mixed plans: presets and an inline rule string ------------------
+    for plan in ("w4a16_sensitive_fp", "mixed_sensitive",
+                 "block[0].*=float;ffn.*=w4a16;*=int_sim;lm_head=float"):
+        show(plan[:22], serve("qwen2-0.5b", quant_plan=plan, **common))
+
+    # -- 3. quantized checkpoint: save -> restore -> serve, verified --------
+    out = serve("qwen2-0.5b", quant_plan="mixed_sensitive",
+                quantized_ckpt=True, **common)
+    q = out["quantized_ckpt"]
+    show("from quantized ckpt", out)
+    print(f"checkpoint: {q['quantized_bytes']/1e3:.0f} kB packed vs "
+          f"{q['float_master_bytes']/1e3:.0f} kB float masters, "
+          f"load {q['load_s']*1e3:.0f} ms")
+    print("bit-identical logits vs plan-on-masters:",
+          q["bit_identical_logits"], "| generated tokens match:",
+          q["tokens_match"])
+    assert q["bit_identical_logits"] and q["tokens_match"]
 
 
 if __name__ == "__main__":

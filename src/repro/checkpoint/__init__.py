@@ -1,7 +1,10 @@
-"""Checkpointing substrate."""
+"""Checkpointing substrate (float masters + quantized serving format)."""
 from .ckpt import (  # noqa: F401
     CheckpointManager,
+    QUANTIZED_FORMAT,
     latest_step,
     restore_checkpoint,
+    restore_quantized,
     save_checkpoint,
+    save_quantized,
 )

@@ -54,9 +54,10 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     os.makedirs(tmp, exist_ok=True)
 
     flat = _flatten(tree)
-    arrays = {}
+    arrays, dtypes = {}, {}
     for k, v in flat.items():
         a = np.asarray(jax.device_get(v))
+        dtypes[k] = a.dtype.name            # logical dtype (pre-conversion)
         if a.dtype.name == "bfloat16":      # npz has no bf16: store f32 (lossless)
             a = a.astype(np.float32)
         arrays[k] = a
@@ -70,7 +71,7 @@ def save_checkpoint(directory: str, step: int, tree: Any,
             "process_count": jax.process_count(),
             "keys": sorted(arrays.keys()),
             "shapes": {k: list(v.shape) for k, v in arrays.items()},
-            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "dtypes": dtypes,
         }
         manifest.update(extra_meta or {})
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -94,6 +95,18 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _load_shards(path: str, manifest: Dict) -> Dict[str, np.ndarray]:
+    """Assemble every host's shard file into one {key: array} map."""
+    data: Dict[str, np.ndarray] = {}
+    for p in range(manifest["process_count"]):
+        fn = os.path.join(path, f"shard_{p}.npz")
+        if os.path.exists(fn):
+            with np.load(fn) as z:
+                for k in z.files:
+                    data[k] = z[k]
+    return data
+
+
 def restore_checkpoint(directory: str, step: int, like: Any,
                        shardings: Optional[Any] = None) -> Any:
     """Restore into the structure of `like`; if `shardings` (a pytree of
@@ -102,13 +115,7 @@ def restore_checkpoint(directory: str, step: int, like: Any,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    data: Dict[str, np.ndarray] = {}
-    for p in range(manifest["process_count"]):
-        fn = os.path.join(path, f"shard_{p}.npz")
-        if os.path.exists(fn):
-            with np.load(fn) as z:
-                for k in z.files:
-                    data[k] = z[k]
+    data = _load_shards(path, manifest)
 
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     flat_shard = (jax.tree_util.tree_leaves(shardings)
@@ -123,6 +130,85 @@ def restore_checkpoint(directory: str, step: int, like: Any,
         else:
             leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ----------------------------------------------------------- quantized ----
+#: manifest tag identifying serving-ready packed checkpoints
+QUANTIZED_FORMAT = "quantized-v1"
+
+
+def save_quantized(directory: str, step: int, params, cfg, rt=None,
+                   plan=None, min_size: int = 1 << 12) -> str:
+    """Quantize-and-save: pack float-master `params` per the active
+    QuantPlan (every quantized-serving site becomes uint8 K-packed nibbles +
+    bf16 scales — ~4x smaller artifacts than float masters) and store the
+    plan itself in the manifest.  Reuses the atomic `.tmp_` + os.replace
+    machinery of `save_checkpoint`.
+
+    Pass either `plan` (a QuantPlan) or `rt` (a Runtime whose
+    quant_plan/quant_backend selects one).  Returns the checkpoint path.
+    """
+    from repro.core.quant_plan import (
+        CKPT_PACKED, active_plan, plan_pack_tree, plan_to_dict,
+    )
+
+    if plan is None:
+        assert rt is not None, "save_quantized needs a plan or a Runtime"
+        plan = active_plan(cfg, rt)
+    packed = plan_pack_tree(params, cfg, plan, min_size=min_size,
+                            backends=CKPT_PACKED, scale_dtype=jnp.bfloat16)
+    return save_checkpoint(
+        directory, step, packed,
+        extra_meta={"format": QUANTIZED_FORMAT, "arch": cfg.name,
+                    "plan": plan_to_dict(plan)})
+
+
+def restore_quantized(directory: str, step: Optional[int] = None,
+                      *, cfg=None, rt=None):
+    """Restore a quantized checkpoint into a serving-ready packed tree —
+    no float master, no `like` template, no re-pack at load.  The tree is
+    rebuilt directly from the manifest keys (uint8 nibbles stay uint8;
+    bf16 leaves round-trip bit-exactly through the f32 npz encoding).
+
+    The restored tree only serves correctly under the plan it was saved
+    with — per-site backends and the packed/float split are baked into the
+    weights.  Pass the serving `cfg` + `rt` to assert their active plan
+    matches the stored one (strongly recommended: a mismatched Runtime
+    would silently route packed sites through the wrong backend math).
+
+    Returns (params_tree, manifest); the stored plan is
+    `quant_plan.plan_from_dict(manifest["plan"])`.
+    """
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoint in {directory}"
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest.get("format") == QUANTIZED_FORMAT, (
+        f"{path} is not a quantized checkpoint "
+        f"(format={manifest.get('format')!r}); use restore_checkpoint")
+    if cfg is not None and rt is not None:
+        from repro.core.quant_plan import active_plan, plan_from_dict
+
+        stored = plan_from_dict(manifest["plan"])
+        live = active_plan(cfg, rt)
+        assert live.rules == stored.rules, (
+            f"runtime plan {live.name!r} does not match the plan this "
+            f"checkpoint was saved with ({stored.name!r}); set "
+            f"Runtime.quant_plan to the stored plan")
+    data = _load_shards(path, manifest)
+
+    tree: Dict[str, Any] = {}
+    for key in manifest["keys"]:
+        leaf = jnp.asarray(data[key],
+                           dtype=jnp.dtype(manifest["dtypes"][key]))
+        node = tree
+        parts = key.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+    return tree, manifest
 
 
 class CheckpointManager:

@@ -58,6 +58,9 @@ class ArchConfig:
     # misc
     norm_eps: float = 1e-6
     quant: QuantConfig = QuantConfig(backend="fake_quant")
+    # optional per-arch mixed-precision plan (preset name | json path |
+    # inline rules — see core.quant_plan); None => uniform `quant`
+    quant_plan: Optional[str] = None
     notes: str = ""
     source: str = ""
 
@@ -154,16 +157,26 @@ class Runtime:
     attn_chunk_q: int = 512
     loss_chunk: int = 4096          # 0 = unchunked
     remat: str = "dots"             # none | dots | full
-    quant_backend: Optional[str] = None  # override ArchConfig.quant.backend
+    # DEPRECATED: uniform backend-string override (kept working — it maps to
+    # a uniform plan).  Prefer `quant_plan`, which carries the full per-site
+    # QuantConfig instead of losing everything but the backend string.
+    quant_backend: Optional[str] = None
+    # mixed-precision plan spec: preset name | json path | inline
+    # "pattern=backend[;...]" rules (core.quant_plan).  Takes precedence
+    # over quant_backend and ArchConfig.quant/quant_plan.
+    quant_plan: Optional[str] = None
     cache_dtype: str = "bfloat16"   # KV-cache dtype: bfloat16 | int8 (§Perf)
     compute_dtype: str = "bfloat16"
     aligned_decode: bool = True     # batch rows share positions: DUS cache
                                     # writes instead of scatter (§Perf)
 
-    def quant_cfg(self, arch: ArchConfig) -> QuantConfig:
-        if self.quant_backend is None:
-            return arch.quant
-        return dataclasses.replace(arch.quant, backend=self.quant_backend)
+    def quant_cfg(self, arch: ArchConfig, site: str = "") -> QuantConfig:
+        """Per-site QuantConfig under the active plan.  `site` is the
+        hierarchical call-site name (e.g. "block[3].attn.qkv"); "" resolves
+        the plan default — exactly the old uniform behavior."""
+        from repro.core.quant_plan import active_plan
+
+        return active_plan(arch, self).resolve(site)
 
 
 COST_PROBE = Runtime(scan_layers=False, attn_impl="full", loss_chunk=0, remat="none")

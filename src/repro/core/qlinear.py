@@ -1,7 +1,9 @@
 """QuantizedLinear: the paper's technique as a first-class framework feature.
 
 Every projection in every architecture config routes through `qdense`.  The
-backend is selected by `QuantConfig.backend`:
+backend is selected by `QuantConfig.backend` out of the registry in
+`core.backends` (one function per backend, registered by name — new backends
+are additions, not edits):
 
   float       -- plain bf16/f32 GEMM (reference / ablation baseline)
   fake_quant  -- QAT: STE fake-quant on weights (per-out-channel) and
@@ -19,8 +21,13 @@ backend is selected by `QuantConfig.backend`:
                  (the paper's circuit, used as the end-to-end oracle; O(bits)
                  slower, tests / tiny shapes only).
 
-Weights are stored as float master copies (training) — serving-time packing is
-done once by `pack_params`.
+Which backend runs at which call site is decided by the active QuantPlan
+(`core.quant_plan`): the `tag`/site string each model layer passes names the
+call site, and `Runtime.quant_cfg(arch, site)` resolves it to a per-site
+QuantConfig before calling qdense.
+
+Weights are stored as float master copies (training) — serving-time packing
+is done once by `pack_params`/`quant_plan.plan_pack_tree`.
 """
 
 from __future__ import annotations
@@ -32,16 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.kernels.packing import pack_kmajor, prepack_kmajor
-from .mult4_proposed import build_proposed_mult4
-from .quant import (
-    fake_quant,
-    pack_int4,
-    quant_scale,
-    quantize,
-    to_unsigned_mag,
-    unpack_int4,
-)
+from repro.kernels.packing import prepack_kmajor
+from .quant import pack_int4, quant_scale, quantize, unpack_int4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,91 +76,41 @@ def qdense(
     """Quantized dense layer. Output dtype follows x.
 
     `w` may be a pre-packed serving weight (`{"packed": uint8 [K, N/2],
-    "scale": f32 [1, N]}`, from `pack_tree`): weight bytes drop 4x vs bf16 —
-    the paper's area argument at system level.  Packed backends:
+    "scale": [1, N]}`, from `quant_plan.plan_pack_tree`): weight bytes drop
+    4x vs bf16 — the paper's area argument at system level.  Packed backends:
     `w4a16_packed` (dequant + bf16 GEMM) and `w4a4_packed` (dynamic per-token
     int4 activations + int8 GEMM + int32 accum, the full technique).
 
-    `tag` names the call site (e.g. "ffn.w_in"): it keys per-deployment-shape
-    tile tuning in `kernels.autotune`, so the same GEMM shape can carry
-    different tuned blocks at different sites.  Kernel-backed GEMMs run
-    through the Pallas kernels on TPU and their XLA twins elsewhere
+    `tag` names the call site (e.g. "block[3].ffn.w_in"): the same string
+    keys the per-site backend choice in the active QuantPlan *and*
+    per-deployment-shape tile tuning in `kernels.autotune`, so the same GEMM
+    shape can carry different tuned blocks at different sites.  Kernel-backed
+    GEMMs run through the Pallas kernels on TPU and their XLA twins elsewhere
     (`ops` dispatch) — identical math either way.
-    """
-    if isinstance(w, dict) and "packed" in w:
-        return _qdense_packed(w, x, cfg, bias, tag)
-    if cfg.backend in ("w4a4_packed", "w4a16_packed"):
-        # weight not packed (too small / excluded by pack_tree): equivalent
-        # on-the-fly path
-        cfg = dataclasses.replace(
-            cfg, backend="int_sim" if cfg.backend == "w4a4_packed" else "w4a16")
-    out_dtype = x.dtype
-    if cfg.backend == "float":
-        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
-    elif cfg.backend == "fake_quant":
-        wq = fake_quant(w, axis=0, bits=cfg.w_bits)          # per-out-channel
-        # per-token activation scales: keeps prefill/decode bit-consistent
-        xq = fake_quant(x, axis=-1, bits=cfg.a_bits)         # stays x.dtype
-        y = jnp.einsum("...k,kn->...n", xq, wq.astype(x.dtype))
-    elif cfg.backend in ("int_sim", "pallas_int4"):
-        x2, lead = _flatten_batch(x.astype(jnp.float32))
-        w_scale = quant_scale(w, axis=0, bits=cfg.w_bits)    # [1, N]
-        w_q = quantize(w, w_scale, bits=cfg.w_bits)
-        # the Pallas kernels are int4-specific; other bit widths keep the
-        # XLA path so cfg.a_bits/w_bits are honored on every backend
-        if cfg.backend == "pallas_int4" and ops.use_pallas() \
-                and cfg.a_bits == 4 and cfg.w_bits == 4:
-            # quantize + matmul + dequant in one pallas_call; the weight is
-            # packed K-major directly from the quantized master (no
-            # interleaved round-trip)
-            y = ops.int4_matmul_fused_kmajor(
-                x2, pack_kmajor(w_q), w_scale, tag=tag)
-        else:
-            a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)  # per-row
-            a_q = quantize(x2, a_scale, bits=cfg.a_bits)
-            acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
-            y = acc.astype(jnp.float32) * a_scale * w_scale
-        y = y.reshape(*lead, w.shape[1])
-    elif cfg.backend == "w4a16":
-        from .quant import group_dequantize, group_quantize
 
-        x2, lead = _flatten_batch(x)
-        g = cfg.group_size if cfg.group_size else w.shape[0]
-        w_q, w_scale = group_quantize(w, g, bits=cfg.w_bits)
-        if ops.use_pallas() and cfg.w_bits == 4:
-            rm = 2 * g if w_scale.ndim == 3 else 2
-            y = ops.w4a16_matmul_kmajor(x2, pack_kmajor(w_q, rm), w_scale, g,
-                                        tag=tag)
-        else:
-            wf = group_dequantize(w_q, w_scale, g)
-            y = jnp.dot(x2.astype(jnp.float32), wf,
-                        preferred_element_type=jnp.float32)
-        y = y.reshape(*lead, w.shape[1])
-    elif cfg.backend == "netlist":
-        y = _netlist_matmul(w, x, cfg)
+    The shared wrapper here owns batch flattening, the reshape epilogue,
+    bias add and output-dtype cast; the per-backend GEMMs live in
+    `core.backends` (registry — see `register_backend`).
+    """
+    from .backends import get_backend
+
+    if isinstance(w, dict) and "packed" in w:
+        fn = _packed_backend
     else:
-        raise ValueError(cfg.backend)
+        if cfg.backend in ("w4a4_packed", "w4a16_packed"):
+            # weight not packed (too small / excluded by the plan packer):
+            # equivalent on-the-fly path
+            cfg = dataclasses.replace(
+                cfg,
+                backend="int_sim" if cfg.backend == "w4a4_packed" else "w4a16")
+        fn = get_backend(cfg.backend)
+    out_dtype = x.dtype
+    x2, lead = _flatten_batch(x)
+    y = fn(w, x2, cfg, tag)
+    y = y.reshape(*lead, y.shape[-1])
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y.astype(out_dtype)
-
-
-def _netlist_matmul(w: jnp.ndarray, x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
-    """End-to-end oracle: every 4-bit product through the simulated circuit."""
-    nl = build_proposed_mult4()
-    x2, lead = _flatten_batch(x.astype(jnp.float32))
-    a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)
-    a_q = quantize(x2, a_scale, bits=cfg.a_bits)             # [M, K]
-    w_scale = quant_scale(w, axis=0, bits=cfg.w_bits)
-    w_q = quantize(w, w_scale, bits=cfg.w_bits)              # [K, N]
-    mag_a, sign_a = to_unsigned_mag(a_q)
-    mag_w, sign_w = to_unsigned_mag(w_q)
-    # products [M, K, N] through the netlist (vectorized over all pairs)
-    prod = nl(mag_a[:, :, None], mag_w[None, :, :]).astype(jnp.int32)
-    prod = prod * sign_a[:, :, None] * sign_w[None, :, :]
-    acc = jnp.sum(prod, axis=1).astype(jnp.float32)
-    y = acc * a_scale * w_scale
-    return y.reshape(*lead, w.shape[1])
 
 
 def pack_params(w: jnp.ndarray, cfg: QuantConfig):
@@ -173,50 +122,48 @@ def pack_params(w: jnp.ndarray, cfg: QuantConfig):
     return pack_int4(w_q, axis=-1), w_scale
 
 
-def _qdense_packed(w, x, cfg: QuantConfig, bias, tag: str = ""):
-    """Serving path: `w` from pack_tree / pack_weight_nd.
+def _packed_backend(w, x2, cfg: QuantConfig, tag: str = ""):
+    """Serving path: `w` from plan_pack_tree / pack_weight_nd.
 
     On Pallas backends the GEMM runs through the kernels (W4A4: fused
     activation-quantize; W4A16: per-channel epilogue kernel) using the
     `packed_km` planar weight when `prepack_tree` added one (else the
     interleaved weight is relayouted in-graph).  Elsewhere: XLA twins."""
-    out_dtype = x.dtype
     packed, w_scale = w["packed"], w["scale"]
-    # packed weights are int4 by pack_tree construction; int_sim keeps its
-    # documented pure-XLA/pjit contract even on Pallas backends, and
-    # non-int4 activation configs keep the XLA path (a_bits honored)
+    # packed weights are int4 by construction; int_sim keeps its documented
+    # pure-XLA/pjit contract even on Pallas backends, and non-int4
+    # activation configs keep the XLA path (a_bits honored)
     kernel_ok = ops.use_pallas() and packed.ndim == 2
     if cfg.backend in ("w4a4_packed", "int_sim", "pallas_int4"):
-        x2, lead = _flatten_batch(x.astype(jnp.float32))
+        xf = x2.astype(jnp.float32)
         if kernel_ok and cfg.backend != "int_sim" and cfg.a_bits == 4:
             w_km = w.get("packed_km")
             if w_km is None:
                 w_km = prepack_kmajor(packed)
-            y = ops.int4_matmul_fused_kmajor(x2, w_km, w_scale, tag=tag)
-            n_out = w_km.shape[1]
-        else:
-            a_scale = quant_scale(x2, axis=1, bits=cfg.a_bits)
-            a_q = quantize(x2, a_scale, bits=cfg.a_bits)
-            w_q = unpack_int4(packed, axis=-1)
-            acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
-            y = acc.astype(jnp.float32) * a_scale * w_scale
-            n_out = w_q.shape[1]
-        y = y.reshape(*lead, n_out)
-    elif kernel_ok:                     # w4a16_packed through the kernel
-        x2, lead = _flatten_batch(x)
+            return ops.int4_matmul_fused_kmajor(xf, w_km, w_scale, tag=tag)
+        a_scale = quant_scale(xf, axis=1, bits=cfg.a_bits)
+        a_q = quantize(xf, a_scale, bits=cfg.a_bits)
+        w_q = unpack_int4(packed, axis=-1)
+        acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * a_scale * w_scale
+    # w4a16 / w4a16_packed: pack_weight_nd scales are per-output-channel
+    # [1, N] or per-group [K//G, 1, N] — the group size is recovered from
+    # the scale shape
+    K = x2.shape[1]
+    g = K // w_scale.shape[0] if w_scale.ndim == 3 else K
+    if kernel_ok:                       # via the epilogue kernel
         w_km = w.get("packed_km")
         if w_km is None:
-            w_km = prepack_kmajor(packed)
-        # pack_weight_nd scales are per-output-channel [1, N]
-        y = ops.w4a16_matmul_kmajor(x2, w_km, w_scale, x2.shape[1], tag=tag)
-        y = y.reshape(*lead, w_km.shape[1])
-    else:                               # w4a16_packed: dequant + bf16 GEMM
-        w_q = unpack_int4(packed, axis=-1)
-        wf = (w_q.astype(jnp.float32) * w_scale).astype(x.dtype)
-        y = jnp.einsum("...k,kn->...n", x, wf)
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    return y.astype(out_dtype)
+            w_km = prepack_kmajor(packed, 2 * g if w_scale.ndim == 3 else 2)
+        return ops.w4a16_matmul_kmajor(x2, w_km, w_scale, g, tag=tag)
+    # dequant + activation-dtype GEMM
+    wf = unpack_int4(packed, axis=-1).astype(jnp.float32)
+    if w_scale.ndim == 3:
+        N = wf.shape[-1]
+        wf = (wf.reshape(K // g, g, N) * w_scale).reshape(K, N)
+    else:
+        wf = wf * w_scale
+    return jnp.dot(x2, wf.astype(x2.dtype))
 
 
 #: linear-weight leaf names eligible for serving-side packing (allowlist).
@@ -229,11 +176,27 @@ PACKABLE_NAMES = frozenset({
 
 
 def pack_weight_nd(w: jnp.ndarray, cfg: QuantConfig):
-    """Pack a [..., K, N] float weight: int4 per-output-channel (scale over
-    the K axis), nibbles packed along N.  Works for plain [K,N], layer-
-    stacked [L,K,N] and stacked experts [L,E,K,N]."""
-    scale = quant_scale(w, axis=-2, bits=cfg.w_bits)          # [..., 1, N]
-    q = quantize(w, scale, bits=cfg.w_bits)
+    """Pack a [..., K, N] float weight, nibbles packed along N.  Works for
+    plain [K,N], layer-stacked [L,K,N] and stacked experts [L,E,K,N].
+
+    Scales follow `cfg.group_size`: 0 (or >= K) gives per-output-channel
+    scales [..., 1, N]; a divisor G of K gives per-group scales
+    [..., K//G, 1, N] — the same grouping the on-the-fly w4a16 backend
+    computes, so grouped plans keep their numerics through a quantized
+    checkpoint."""
+    K, N = w.shape[-2], w.shape[-1]
+    g = cfg.group_size
+    if g and 0 < g < K:
+        # same contract as the on-the-fly group_quantize: a group size that
+        # doesn't divide K is a plan error, not a silent per-channel
+        # fallback (the checkpoint must carry the numerics the plan names)
+        assert K % g == 0, (K, g)
+        wg = w.reshape(*w.shape[:-2], K // g, g, N)
+        scale = quant_scale(wg, axis=-2, bits=cfg.w_bits)  # [..., K//g, 1, N]
+        q = quantize(wg, scale, bits=cfg.w_bits).reshape(w.shape)
+    else:
+        scale = quant_scale(w, axis=-2, bits=cfg.w_bits)   # [..., 1, N]
+        q = quantize(w, scale, bits=cfg.w_bits)
     return {"packed": pack_int4(q, axis=-1), "scale": scale}
 
 
@@ -241,7 +204,7 @@ def prepack_tree(params):
     """Add a `packed_km` planar K-major twin to every packed serving weight
     (see kernels/packing.py).  One-time, serving-side: the Pallas kernels
     then unpack with a shift/mask only — no per-step relayout.  No-op on
-    unpacked leaves; safe to call on any pack_tree output.
+    unpacked leaves; safe to call on any plan_pack_tree output.
 
     MoE expert weights are skipped: they run through the batched einsum in
     models/moe.py, never the 2D kernels, so a twin would just double their
@@ -255,29 +218,17 @@ def prepack_tree(params):
             str(getattr(p, "key", "")) == "experts" for p in path)
         if isinstance(d, dict) and "packed" in d and "packed_km" not in d \
                 and not in_experts:
-            return {**d, "packed_km": nmajor_to_kmajor(d["packed"])}
+            # grouped scales [..., K//G, 1, N] need planar halves that cover
+            # whole groups (row_mult = 2G); per-channel [..., 1, N] need 2.
+            # Grouped is one rank deeper than the packed weight (holds for
+            # plain [K, N/2] and layer-stacked [R, K, N/2] alike).
+            rm = 2
+            if d["scale"].ndim == d["packed"].ndim + 1:
+                rm = 2 * (d["packed"].shape[-2] // d["scale"].shape[-3])
+            return {**d, "packed_km": nmajor_to_kmajor(d["packed"], rm)}
         return d
 
     return jax.tree_util.tree_map_with_path(
         maybe, params, is_leaf=lambda n: isinstance(n, dict) and "packed" in n)
 
 
-def pack_tree(params, cfg: QuantConfig, min_size: int = 1 << 12):
-    """Convert linear weights (by allowlisted name) into the packed serving
-    format.  Norms, biases, convs, embeddings, routers stay float."""
-    import jax
-
-    def maybe_pack(path, leaf):
-        name = str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
-        packable = (
-            name in PACKABLE_NAMES
-            and leaf.ndim >= 2
-            and leaf.size >= min_size
-            and leaf.shape[-1] % 2 == 0
-            and leaf.dtype in (jnp.float32, jnp.bfloat16)
-        )
-        if not packable:
-            return leaf
-        return pack_weight_nd(leaf.astype(jnp.float32), cfg)
-
-    return jax.tree_util.tree_map_with_path(maybe_pack, params)

@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 
 INT4_MIN, INT4_MAX = -8, 7
-INT8_MIN, INT8_MAX = -128, 127
 
 
 def _qrange(bits: int) -> Tuple[int, int]:

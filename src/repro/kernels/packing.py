@@ -3,8 +3,8 @@
 Two storage layouts for int4 tensors (two values per uint8 byte):
 
   * interleaved N-packed (``core.quant.pack_int4``): adjacent *columns*
-    share a byte.  This is the serialization format (checkpoints,
-    ``pack_tree`` serving weights) — compact and axis-generic, but the
+    share a byte.  This is the serialization format (quantized checkpoints,
+    ``plan_pack_tree`` serving weights) — compact and axis-generic, but the
     in-kernel unpack needs a stack+reshape interleave, which Mosaic lowers
     as a lane-axis relayout on the matmul critical path.
   * planar K-major (``pack_kmajor``): contraction rows ``k`` and

@@ -37,7 +37,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import (  # noqa: E402
     REGISTRY, Runtime, SHAPES, get_config, runnable,
 )
-from repro.core.qlinear import pack_tree  # noqa: E402
+from repro.core.quant_plan import pack_for_serving  # noqa: E402
 from repro.distributed.sharding import (  # noqa: E402
     make_param_shardings, mesh_context, specs_to_shardings,
 )
@@ -75,12 +75,11 @@ def probe_runtime(rt: Runtime) -> Runtime:
 
 
 def _serve_params_sds(cfg, rt: Runtime, mesh):
-    """ShapeDtypeStruct tree (+shardings) for serving params, possibly packed."""
+    """ShapeDtypeStruct tree (+shardings) for serving params, packed per the
+    active QuantPlan (legacy uniform backends map to uniform plans)."""
     def build():
         p = init_model(jax.random.PRNGKey(0), cfg)
-        if rt.quant_backend in ("w4a4_packed", "w4a16_packed"):
-            p = pack_tree(p, rt.quant_cfg(cfg))
-        return p
+        return pack_for_serving(p, cfg, rt)
 
     sds = jax.eval_shape(build)
     specs = make_param_shardings(sds, mesh)
@@ -252,6 +251,10 @@ def main():
     ap.add_argument("--skip-probes", action="store_true")
     ap.add_argument("--serve-float", action="store_true",
                     help="serving cells use bf16 weights (baseline)")
+    ap.add_argument("--quant-plan", default=None,
+                    help="mixed-precision plan for serving cells: preset "
+                         "name | json path | inline pattern=backend rules "
+                         "(see core.quant_plan) — cost-model any plan")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -273,11 +276,17 @@ def main():
         for shape in shapes:
             for mp in meshes:
                 key = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                # the plan override models *serving* deployments; train
+                # cells keep their QAT runtime (fake_quant)
+                serve_cell = SHAPES[shape].kind != "train"
                 try:
                     rep = run_cell(
                         arch, shape, multi_pod=mp, mesh=custom_mesh,
                         skip_probes=args.skip_probes,
-                        serve_packed=not args.serve_float)
+                        serve_packed=not args.serve_float,
+                        rt_overrides=(
+                            {"quant_plan": args.quant_plan}
+                            if args.quant_plan and serve_cell else None))
                 except Exception as e:  # noqa: BLE001
                     rep = {"arch": arch, "shape": shape, "multi_pod": mp,
                            "status": "FAILED", "error": repr(e),

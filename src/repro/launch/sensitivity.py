@@ -1,0 +1,77 @@
+"""Per-site quantization sensitivity sweep.
+
+Which sites *deserve* higher precision?  Starting from a uniform-W4 plan
+(every site int_sim, lm_head included), flip one site group back to float at
+a time and measure logits-MSE against the full-float reference.  A large MSE
+drop when a group is floated means that group's quantization error dominates
+— it's a candidate for a float/w4a16 rule in a mixed plan (this is how
+`mixed_sensitive` was chosen; results in EXPERIMENTS.md §Mixed precision).
+
+Shared by ``benchmarks/run.py`` (the `sensitivity` section) and
+``launch/serve.py --sweep`` (emits the per-site table into the serve JSON
+report).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, Runtime
+from repro.models import forward, init_model
+
+
+def default_groups(cfg: ArchConfig) -> Sequence[str]:
+    groups = ["attn.qkv", "attn.wo", "ffn.*", "lm_head", "block[0].*"]
+    if cfg.n_layers > 1:
+        groups.append(f"block[{cfg.n_layers - 1}].*")
+    return groups
+
+
+def sensitivity_sweep(cfg: ArchConfig, *,
+                      groups: Optional[Sequence[str]] = None,
+                      base_backend: str = "int_sim",
+                      batch: int = 2, seq: int = 16, seed: int = 0) -> Dict:
+    """Per-site-group logits-MSE table vs the uniform-W4 plan.
+
+    Returns ``{"uniform_mse_vs_float": ..., "per_site": [{"site",
+    "mse_vs_float", "delta_vs_uniform"}, ...]}`` — delta > 0 means floating
+    that group removes that much of the uniform plan's quantization error.
+    """
+    groups = list(groups) if groups is not None else list(default_groups(cfg))
+    key = jax.random.PRNGKey(seed)
+    params = init_model(key, cfg)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1),
+                                (batch, seq), 0, cfg.vocab, dtype=jnp.int32)
+    rt0 = Runtime(scan_layers=True, attn_impl="chunked",
+                  attn_chunk_q=min(512, seq), loss_chunk=0, remat="none")
+
+    def logits_for(**rt_kw) -> np.ndarray:
+        rt = dataclasses.replace(rt0, **rt_kw)
+        out = forward(params, tokens, cfg, rt)[0]
+        return np.asarray(out, np.float32)[..., :cfg.vocab]
+
+    ref = logits_for(quant_backend="float")
+    # uniform baseline quantizes *everything*, lm_head included, so the
+    # head's own sensitivity is measurable
+    uniform_spec = f"*={base_backend}"
+    mse_u = float(np.mean((logits_for(quant_plan=uniform_spec) - ref) ** 2))
+
+    rows = []
+    for g in groups:
+        spec = f"{g}=float;{uniform_spec}"
+        mse = float(np.mean((logits_for(quant_plan=spec) - ref) ** 2))
+        rows.append({"site": g, "mse_vs_float": mse,
+                     "delta_vs_uniform": mse_u - mse})
+    rows.sort(key=lambda r: -r["delta_vs_uniform"])
+    return {
+        "arch": cfg.name,
+        "base_backend": base_backend,
+        "batch": batch, "seq": seq,
+        "uniform_mse_vs_float": mse_u,
+        "per_site": rows,
+    }

@@ -6,44 +6,136 @@ p50/p95 per-request latency.  `--layout compare` runs the same trace through
 the paged and contiguous KV layouts and verifies the generated tokens are
 bit-identical.
 
+Mixed precision: `--quant-plan <name|path|inline>` serves under any
+site-addressable QuantPlan (core.quant_plan).  `--quantized-ckpt` proves the
+quantized-checkpoint path end-to-end: save packed nibbles + scales + plan,
+restore with no float master, serve from the restored tree, and verify
+bit-identical logits/tokens against the same plan applied to float masters.
+`--sweep` adds the per-site sensitivity table to the report.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
         --layout compare --requests 8 --rate 0.5 --quant w4a4_packed \
         --out BENCH_serve.json
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --layers 2 --quant-plan mixed_sensitive --quantized-ckpt --sweep \
+        --out BENCH_quantized.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import Runtime, ServingConfig, get_config
 from repro.serving.api import poisson_trace, run_trace
 from repro.serving.engine import InferenceEngine, build_params
 
 
-def serve(arch: str, *, reduced=True, layout=None, max_batch=4,
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
+    return total
+
+
+def _quantized_ckpt_report(cfg, rt, ckpt_dir, seed):
+    """Save a quantized checkpoint from fresh float masters, restore it, and
+    verify it against the same plan applied directly to the masters.
+    Returns (serving_params_from_ckpt, report_dict)."""
+    from repro.checkpoint import save_checkpoint, save_quantized, \
+        restore_quantized
+    from repro.core.quant_plan import (
+        CKPT_PACKED, active_plan, plan_pack_tree,
+    )
+    from repro.kernels import ops
+    from repro.core.qlinear import prepack_tree
+    from repro.models import forward, init_model
+
+    masters = init_model(jax.random.PRNGKey(seed), cfg)
+    plan = active_plan(cfg, rt)
+
+    t0 = time.perf_counter()
+    save_quantized(os.path.join(ckpt_dir, "q"), 0, masters, cfg, plan=plan)
+    save_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    restored, manifest = restore_quantized(os.path.join(ckpt_dir, "q"),
+                                           cfg=cfg, rt=rt)
+    load_s = time.perf_counter() - t0
+    # float-master baseline checkpoint, for the size/load-time comparison
+    t0 = time.perf_counter()
+    save_checkpoint(os.path.join(ckpt_dir, "f"), 0, masters)
+    float_save_s = time.perf_counter() - t0
+
+    # the float-master path: the same plan packed at load time
+    reference = plan_pack_tree(masters, cfg, plan, backends=CKPT_PACKED,
+                               scale_dtype=jnp.bfloat16)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1), (1, 8),
+                                0, cfg.vocab, dtype=jnp.int32)
+    la = np.asarray(forward(restored, tokens, cfg, rt)[0], np.float32)
+    lb = np.asarray(forward(reference, tokens, cfg, rt)[0], np.float32)
+    report = {
+        "plan": plan.name or "inline",
+        "manifest_format": manifest.get("format"),
+        "bit_identical_logits": bool(np.array_equal(la, lb)),
+        "quantized_bytes": _dir_bytes(os.path.join(ckpt_dir, "q")),
+        "float_master_bytes": _dir_bytes(os.path.join(ckpt_dir, "f")),
+        "save_s": round(save_s, 3),
+        "load_s": round(load_s, 3),
+        "float_save_s": round(float_save_s, 3),
+    }
+    if ops.use_pallas():
+        restored = prepack_tree(restored)
+        reference = prepack_tree(reference)
+    return restored, reference, report
+
+
+def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
           page_size=16, num_pages=48, max_ctx=128, requests=8, rate=0.5,
           prompt_lens=(8, 16, 32), gen_lens=(8, 16),
-          quant_backend="w4a4_packed", cache_dtype="bfloat16", seed=0):
+          quant_backend="w4a4_packed", quant_plan=None, cache_dtype="bfloat16",
+          quantized_ckpt=False, ckpt_dir=None, sweep=False, seed=0):
     cfg = get_config(arch)
     if reduced:
-        cfg = cfg.reduced()
+        cfg = cfg.reduced(**({"n_layers": layers} if layers else {}))
     if layout is None:   # paged needs a pure-attention stack (SSM doesn't page)
         blocks = tuple(cfg.pattern) + tuple(cfg.tail)
         layout = "paged" if all(bt == "A" for bt in blocks) else "contiguous"
     rt = Runtime(scan_layers=True, attn_impl="chunked",
                  attn_chunk_q=min(512, max_ctx), loss_chunk=0,
-                 quant_backend=quant_backend, cache_dtype=cache_dtype,
+                 quant_backend=None if quant_plan else quant_backend,
+                 quant_plan=quant_plan, cache_dtype=cache_dtype,
                  remat="none")
     trace = poisson_trace(requests, rate, prompt_lens, gen_lens,
                           cfg.vocab, seed=seed)
     layouts = (["paged", "contiguous"] if layout == "compare" else [layout])
-    params = build_params(cfg, rt, seed)
 
     report = {"arch": arch, "reduced": reduced,
-              "quant": quant_backend, "cache_dtype": cache_dtype,
+              "quant": quant_plan or quant_backend, "cache_dtype": cache_dtype,
               "requests": requests, "rate_per_step": rate}
+    params_ref = None
+    if quantized_ckpt:
+        # serve from a quantized checkpoint; keep the plan-on-masters twin
+        # around to verify the generated tokens match end-to-end
+        def with_dir(d):
+            return _quantized_ckpt_report(cfg, rt, d, seed)
+
+        if ckpt_dir:
+            os.makedirs(ckpt_dir, exist_ok=True)
+            params, params_ref, report["quantized_ckpt"] = with_dir(ckpt_dir)
+        else:
+            with tempfile.TemporaryDirectory() as d:
+                params, params_ref, report["quantized_ckpt"] = with_dir(d)
+    else:
+        params = build_params(cfg, rt, seed)
+
     tokens_by_layout = {}
     for lay in layouts:
         sv = ServingConfig(layout=lay, max_batch=max_batch,
@@ -54,6 +146,23 @@ def serve(arch: str, *, reduced=True, layout=None, max_batch=4,
         stats, finished = run_trace(engine, trace)
         report[lay] = stats
         tokens_by_layout[lay] = [r.tokens for r in finished]
+
+    if params_ref is not None:
+        # end-to-end: the restored-checkpoint engine must generate exactly
+        # the tokens of the plan-applied-to-float-masters engine
+        sv = ServingConfig(layout=layouts[0], max_batch=max_batch,
+                           page_size=page_size, num_pages=num_pages,
+                           max_ctx=max_ctx)
+        engine_ref = InferenceEngine(cfg, rt, sv, params=params_ref)
+        engine_ref.warmup(prompt_lens)
+        _, finished_ref = run_trace(engine_ref, trace)
+        report["quantized_ckpt"]["tokens_match"] = bool(
+            tokens_by_layout[layouts[0]] == [r.tokens for r in finished_ref])
+
+    if sweep:
+        from repro.launch.sensitivity import sensitivity_sweep
+
+        report["sensitivity"] = sensitivity_sweep(cfg, seed=seed)
 
     if layout == "compare":
         same = tokens_by_layout["paged"] == tokens_by_layout["contiguous"]
@@ -84,6 +193,9 @@ def main():
     grp = ap.add_mutually_exclusive_group()
     grp.add_argument("--reduced", action="store_true", default=True)
     grp.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="override layer count of the reduced config (e.g. 2 "
+                         "so block-indexed plan rules have layers to differ on)")
     ap.add_argument("--layout", default=None,
                     choices=["paged", "contiguous", "compare"],
                     help="default: paged for attention archs, else contiguous")
@@ -96,22 +208,37 @@ def main():
                     help="Poisson arrival rate in requests per decode step")
     ap.add_argument("--prompt-lens", default="8,16,32")
     ap.add_argument("--gen-lens", default="8,16")
-    ap.add_argument("--quant", default="w4a4_packed")
+    ap.add_argument("--quant", default="w4a4_packed",
+                    help="uniform backend (deprecated in favor of "
+                         "--quant-plan; kept working via a uniform plan)")
+    ap.add_argument("--quant-plan", default=None,
+                    help="mixed-precision plan: preset name | json path | "
+                         "inline pattern=backend rules (core.quant_plan)")
     ap.add_argument("--cache-dtype", default="bfloat16")
+    ap.add_argument("--quantized-ckpt", action="store_true",
+                    help="serve from a quantized checkpoint (save+restore, "
+                         "verify bit-identical vs plan-on-float-masters)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="keep the quantized checkpoint here (default: tmp)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="add the per-site sensitivity table to the report")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="also write the JSON report to this path")
     args = ap.parse_args()
 
     out = serve(
-        args.arch, reduced=args.reduced, layout=args.layout,
+        args.arch, reduced=args.reduced, layers=args.layers,
+        layout=args.layout,
         max_batch=args.max_batch, page_size=args.page_size,
         num_pages=args.num_pages, max_ctx=args.max_ctx,
         requests=args.requests, rate=args.rate,
         prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
         gen_lens=tuple(int(x) for x in args.gen_lens.split(",")),
-        quant_backend=args.quant, cache_dtype=args.cache_dtype,
-        seed=args.seed,
+        quant_backend=args.quant, quant_plan=args.quant_plan,
+        cache_dtype=args.cache_dtype,
+        quantized_ckpt=args.quantized_ckpt, ckpt_dir=args.ckpt_dir,
+        sweep=args.sweep, seed=args.seed,
     )
     text = json.dumps(out, indent=1)
     print(text)

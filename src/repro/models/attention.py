@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, Runtime
 from repro.core.qlinear import qdense
+from repro.core.quant_plan import join_site
 from repro.distributed.sharding import dp_axes, shard, shard_spec, tp_size
 from .common import apply_mrope, apply_rope, normal_init, rms_norm
 
@@ -259,16 +260,20 @@ def apply_attention(
     positions: jnp.ndarray,          # [B, S] (or [3, B, S] for mrope)
     cache: Optional[Dict] = None,
     update_cache: bool = False,
+    site: str = "",
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    qc = rt.quant_cfg(cfg)
 
-    # tags key per-call-site tile tuning in kernels.autotune (QKV share a
-    # GEMM shape per config; wo differs)
-    q = qdense(params["wq"], x, qc, params.get("wq_bias"), tag="attn.wq")
-    k = qdense(params["wk"], x, qc, params.get("wk_bias"), tag="attn.wk")
-    v = qdense(params["wv"], x, qc, params.get("wv_bias"), tag="attn.wv")
+    # one site string keys both the plan's backend choice and per-call-site
+    # tile tuning in kernels.autotune (QKV share a GEMM shape per config so
+    # they share a site; wo differs)
+    qkv_site = join_site(site, "attn.qkv")
+    wo_site = join_site(site, "attn.wo")
+    qc = rt.quant_cfg(cfg, qkv_site)
+    q = qdense(params["wq"], x, qc, params.get("wq_bias"), tag=qkv_site)
+    k = qdense(params["wk"], x, qc, params.get("wk_bias"), tag=qkv_site)
+    v = qdense(params["wv"], x, qc, params.get("wv_bias"), tag=qkv_site)
     q = shard(q, "act_bthd")
     q = q.reshape(B, S, H, hd)
     k = k.reshape(B, S, KV, hd)
@@ -342,5 +347,5 @@ def apply_attention(
             new_cache["pos"] = cache["pos"] + S
 
     out = out.reshape(B, S, H * hd)
-    y = qdense(params["wo"], out, qc, tag="attn.wo")
+    y = qdense(params["wo"], out, rt.quant_cfg(cfg, wo_site), tag=wo_site)
     return shard(y, "act_btd"), new_cache

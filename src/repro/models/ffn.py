@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, Runtime
 from repro.core.qlinear import qdense
+from repro.core.quant_plan import join_site
 from repro.distributed.sharding import shard
 from .common import normal_init
 
@@ -27,16 +28,21 @@ def init_ffn(key, cfg: ArchConfig, d_ff: int = 0) -> Dict:
     return p
 
 
-def apply_ffn(params: Dict, x: jnp.ndarray, cfg: ArchConfig, rt: Runtime) -> jnp.ndarray:
-    qc = rt.quant_cfg(cfg)
-    # tags key per-call-site tile tuning in kernels.autotune: the up/down
-    # projections are the serving hot path and tune independently
-    h = qdense(params["w_in"], x, qc, params.get("b_in"), tag="ffn.w_in")
+def apply_ffn(params: Dict, x: jnp.ndarray, cfg: ArchConfig, rt: Runtime,
+              site: str = "ffn") -> jnp.ndarray:
+    # sites key the plan's per-site backend choice AND per-call-site tile
+    # tuning in kernels.autotune: the up/down projections are the serving
+    # hot path and tune independently
+    s_in, s_gate, s_out = (join_site(site, "w_in"), join_site(site, "w_gate"),
+                           join_site(site, "w_out"))
+    h = qdense(params["w_in"], x, rt.quant_cfg(cfg, s_in),
+               params.get("b_in"), tag=s_in)
     if cfg.ffn_type == "swiglu":
-        g = qdense(params["w_gate"], x, qc, tag="ffn.w_gate")
+        g = qdense(params["w_gate"], x, rt.quant_cfg(cfg, s_gate), tag=s_gate)
         h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h)
     h = shard(h, "act_btf")
-    y = qdense(params["w_out"], h, qc, params.get("b_out"), tag="ffn.w_out")
+    y = qdense(params["w_out"], h, rt.quant_cfg(cfg, s_out),
+               params.get("b_out"), tag=s_out)
     return shard(y, "act_btd")

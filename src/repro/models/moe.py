@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig, Runtime
 from repro.core.quant import fake_quant
+from repro.core.quant_plan import join_site
 from repro.distributed.sharding import current_mesh, dp_axes, shard_map
 from .common import normal_init
 
@@ -47,9 +48,11 @@ def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
     return max(8, -(-c // 8) * 8)
 
 
-def _expert_ffn(buf, experts, cfg: ArchConfig, rt: Runtime):
-    """buf [El, C, D] -> [El, C, D] through the (quantized) expert MLPs."""
-    qc = rt.quant_cfg(cfg)
+def _expert_ffn(buf, experts, cfg: ArchConfig, rt: Runtime, site: str = "moe"):
+    """buf [El, C, D] -> [El, C, D] through the (quantized) expert MLPs.
+    All expert weights share one plan site (`<site>.experts`): they run as a
+    batched einsum, so per-expert backends are not addressable."""
+    qc = rt.quant_cfg(cfg, join_site(site, "experts"))
 
     def dense(w):
         if isinstance(w, dict):                # packed int4 serving weights
@@ -71,7 +74,8 @@ def _expert_ffn(buf, experts, cfg: ArchConfig, rt: Runtime):
     return jnp.einsum("ecf,efd->ecd", h, dense(experts["w_out"]))
 
 
-def _moe_shard(xf, router_w, experts, *, e_start, n_local, cfg, rt, axis=None):
+def _moe_shard(xf, router_w, experts, *, e_start, n_local, cfg, rt, axis=None,
+               site="moe"):
     """Core dispatch/compute/combine for `n_local` experts starting at
     `e_start`. xf [T, D]. Returns (partial y [T, D], per-token aux [T])."""
     T, D = xf.shape
@@ -101,7 +105,7 @@ def _moe_shard(xf, router_w, experts, *, e_start, n_local, cfg, rt, axis=None):
     buf = jnp.zeros((n_local, C, D), xf.dtype)
     buf = buf.at[slot_e, slot_c].add(w[:, None] * xf[tok])
 
-    out_buf = _expert_ffn(buf, experts, cfg, rt)               # [El, C, D]
+    out_buf = _expert_ffn(buf, experts, cfg, rt, site=site)    # [El, C, D]
 
     gathered = out_buf[slot_e, slot_c]                         # [T*k, D]
     contrib = gathered * (jnp.where(local, flat_g[order], 0.0)).astype(xf.dtype)[:, None]
@@ -117,7 +121,8 @@ def _moe_shard(xf, router_w, experts, *, e_start, n_local, cfg, rt, axis=None):
 
 
 def apply_moe(
-    params: Dict, x: jnp.ndarray, cfg: ArchConfig, rt: Runtime
+    params: Dict, x: jnp.ndarray, cfg: ArchConfig, rt: Runtime,
+    site: str = "moe",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x [B, S, D] -> (y [B, S, D], aux scalar)."""
     B, S, D = x.shape
@@ -184,6 +189,7 @@ def apply_moe(
             return _moe_shard(
                 xf_l, rw, experts_l,
                 e_start=e_start, n_local=n_local, cfg=cfg, rt=rt, axis="model",
+                site=site,
             )
 
         y, aux_t = shard_map(
@@ -196,6 +202,6 @@ def apply_moe(
     else:
         y, aux_t = _moe_shard(
             xf, params["router"]["w"], params["experts"],
-            e_start=0, n_local=cfg.n_experts, cfg=cfg, rt=rt,
+            e_start=0, n_local=cfg.n_experts, cfg=cfg, rt=rt, site=site,
         )
     return y.reshape(B, S, D), jnp.mean(aux_t)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, Runtime
 from repro.core.qlinear import qdense
+from repro.core.quant_plan import join_site
 from repro.distributed.sharding import shard
 from .common import normal_init
 from .ssm import _causal_conv
@@ -58,18 +59,24 @@ def apply_rglru(
     rt: Runtime,
     cache: Optional[Dict] = None,
     update_cache: bool = False,
+    site: str = "lru",
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
-    qc = rt.quant_cfg(cfg)
     B, S, D = x.shape
 
-    g = jax.nn.gelu(qdense(params["in_g"], x, qc))
-    u = qdense(params["in_x"], x, qc)
+    def qc(leaf):
+        return rt.quant_cfg(cfg, join_site(site, leaf))
+
+    g = jax.nn.gelu(qdense(params["in_g"], x, qc("in_g"),
+                           tag=join_site(site, "in_g")))
+    u = qdense(params["in_x"], x, qc("in_x"), tag=join_site(site, "in_x"))
     u = shard(u, "act_btf")
     conv_state = cache["conv"] if cache is not None else None
     u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"], conv_state)
 
-    r = jax.nn.sigmoid(qdense(params["w_a"], u, qc, params["b_a"])).astype(jnp.float32)
-    i = jax.nn.sigmoid(qdense(params["w_x"], u, qc, params["b_x"])).astype(jnp.float32)
+    r = jax.nn.sigmoid(qdense(params["w_a"], u, qc("w_a"), params["b_a"],
+                              tag=join_site(site, "w_a"))).astype(jnp.float32)
+    i = jax.nn.sigmoid(qdense(params["w_x"], u, qc("w_x"), params["b_x"],
+                              tag=join_site(site, "w_x"))).astype(jnp.float32)
 
     log_a = -_C * jax.nn.softplus(params["lam"]) * r            # [B,S,W] <= 0
     a = jnp.exp(log_a)
@@ -93,5 +100,5 @@ def apply_rglru(
         new_cache = {"conv": new_conv, "h": hs[:, -1]} if update_cache else None
 
     y = hs.astype(x.dtype) * g
-    out = qdense(params["out"], y, qc)
+    out = qdense(params["out"], y, qc("out"), tag=join_site(site, "out"))
     return shard(out, "act_btd"), new_cache

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, Runtime
 from repro.core.qlinear import qdense
+from repro.core.quant_plan import join_site
 from repro.distributed.sharding import shard
 from .common import normal_init, rms_norm
 
@@ -74,13 +75,14 @@ def apply_mamba(
     rt: Runtime,
     cache: Optional[Dict] = None,
     update_cache: bool = False,
+    site: str = "mamba",
 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     B, S, D = x.shape
     di, N, H, P_, G = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
                        cfg.ssm_headdim, cfg.ssm_groups)
-    qc = rt.quant_cfg(cfg)
+    s_in = join_site(site, "in_proj")
 
-    proj = qdense(params["in_proj"], x, qc)
+    proj = qdense(params["in_proj"], x, rt.quant_cfg(cfg, s_in), tag=s_in)
     z = proj[..., :di]
     xBC = proj[..., di:di + conv_dim(cfg)]
     dt = proj[..., di + conv_dim(cfg):]
@@ -173,5 +175,6 @@ def apply_mamba(
 
     y = y.reshape(B, S, di)
     y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
-    out = qdense(params["out_proj"], y, qc)
+    s_out = join_site(site, "out_proj")
+    out = qdense(params["out_proj"], y, rt.quant_cfg(cfg, s_out), tag=s_out)
     return shard(out, "act_btd"), new_cache

@@ -18,6 +18,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, Runtime
 from repro.core.qlinear import qdense
+from repro.core.quant_plan import (
+    active_plan,
+    join_site,
+    layers_per_repeat,
+    plan_repeat_uniform,
+)
 from repro.distributed.sharding import shard
 from .attention import apply_attention, init_attention, init_attn_cache
 from .common import normal_init, rms_norm, sinusoidal_pos_embed
@@ -69,41 +75,48 @@ def init_block_cache(block_type: str, cfg: ArchConfig, rt: Runtime,
 
 def apply_block(
     block_type: str, p: Dict, x, cfg, rt, positions,
-    cache=None, update_cache=False,
+    cache=None, update_cache=False, site: str = "",
 ):
-    """Returns (x, new_cache, aux)."""
+    """Returns (x, new_cache, aux).  `site` is the block's site prefix
+    (e.g. "block[3]"): sub-layers resolve their quant backend and autotune
+    tiles under it (see core.quant_plan)."""
     aux = jnp.zeros((), jnp.float32)
     normed = rms_norm(x, p["norm1"], cfg.norm_eps)
     if block_type == "A":
         h, nc = apply_attention(
             p["attn"], normed, cfg, rt, positions,
-            cache.get("attn") if cache else None, update_cache,
+            cache.get("attn") if cache else None, update_cache, site=site,
         )
         x = x + h
         if cfg.family == "moe":
             n2 = rms_norm(x, p["norm2"], cfg.norm_eps)
-            my, aux = apply_moe(p["moe"], n2, cfg, rt)
+            my, aux = apply_moe(p["moe"], n2, cfg, rt,
+                                site=join_site(site, "moe"))
             extra = 0.0
             if cfg.shared_expert:
-                extra = apply_ffn(p["shared"], n2, cfg, rt)
+                extra = apply_ffn(p["shared"], n2, cfg, rt,
+                                  site=join_site(site, "shared"))
             if cfg.moe_dense_ff:
-                extra = apply_ffn(p["dense_ffn"], n2, cfg, rt)
+                extra = apply_ffn(p["dense_ffn"], n2, cfg, rt,
+                                  site=join_site(site, "dense_ffn"))
             x = x + my + extra
         elif cfg.d_ff:
             x = x + apply_ffn(p["ffn"], rms_norm(x, p["norm2"], cfg.norm_eps),
-                              cfg, rt)
+                              cfg, rt, site=join_site(site, "ffn"))
         return x, ({"attn": nc} if nc is not None else None), aux
     if block_type == "M":
         h, nc = apply_mamba(p["mamba"], normed, cfg, rt,
-                            cache.get("mamba") if cache else None, update_cache)
+                            cache.get("mamba") if cache else None, update_cache,
+                            site=join_site(site, "mamba"))
         return x + h, ({"mamba": nc} if nc is not None else None), aux
     if block_type == "R":
         h, nc = apply_rglru(p["lru"], normed, cfg, rt,
-                            cache.get("lru") if cache else None, update_cache)
+                            cache.get("lru") if cache else None, update_cache,
+                            site=join_site(site, "lru"))
         x = x + h
         if cfg.d_ff:
             x = x + apply_ffn(p["ffn"], rms_norm(x, p["norm2"], cfg.norm_eps),
-                              cfg, rt)
+                              cfg, rt, site=join_site(site, "ffn"))
         return x, ({"lru": nc} if nc is not None else None), aux
     raise ValueError(block_type)
 
@@ -165,31 +178,46 @@ def forward(
         x = x + sinusoidal_pos_embed(tpos, cfg.d_model).astype(dt)
     x = shard(x, "act_btd")
 
-    def unit_body(carry, xs):
-        xc, aux_acc = carry
-        unit_params, unit_cache = xs
-        new_unit_cache = {} if unit_cache is not None else None
-        for j, bt in enumerate(cfg.pattern):
-            blk_cache = unit_cache[f"u{j}"] if unit_cache is not None else None
-            xc, nc, aux = apply_block(
-                bt, unit_params[f"u{j}"], xc, cfg, rt, positions,
-                blk_cache, update_cache,
-            )
-            if new_unit_cache is not None:
-                new_unit_cache[f"u{j}"] = nc if nc is not None else blk_cache
-        return (xc, aux_acc + aux), new_unit_cache
+    P = len(cfg.pattern)
 
-    body = unit_body
-    if rt.remat == "dots":
-        body = jax.checkpoint(
-            unit_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
-        )
-    elif rt.remat == "full":
-        body = jax.checkpoint(unit_body)
+    def make_body(unit_sites):
+        def unit_body(carry, xs):
+            xc, aux_acc = carry
+            unit_params, unit_cache = xs
+            new_unit_cache = {} if unit_cache is not None else None
+            for j, bt in enumerate(cfg.pattern):
+                blk_cache = (unit_cache[f"u{j}"]
+                             if unit_cache is not None else None)
+                xc, nc, aux = apply_block(
+                    bt, unit_params[f"u{j}"], xc, cfg, rt, positions,
+                    blk_cache, update_cache, site=unit_sites[j],
+                )
+                if new_unit_cache is not None:
+                    new_unit_cache[f"u{j}"] = nc if nc is not None else blk_cache
+            return (xc, aux_acc + aux), new_unit_cache
+
+        if rt.remat == "dots":
+            return jax.checkpoint(
+                unit_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        if rt.remat == "full":
+            return jax.checkpoint(unit_body)
+        return unit_body
 
     aux0 = jnp.zeros((), jnp.float32)
     rep_caches = caches["rep"] if caches is not None else None
-    if rt.scan_layers:
+    # per-site plan resolution happens OUTSIDE the scan body (at trace
+    # time), so the compiled graph stays static: lax.scan traces one body
+    # for all repeat units and therefore requires every unit to resolve to
+    # the same per-site configs.  A plan that distinguishes repeats (e.g.
+    # "block[0].*=float") — or a plan-packed tree split per repeat — takes
+    # the unrolled layer loop instead.
+    per_repeat = layers_per_repeat(params)
+    use_scan = (rt.scan_layers and not per_repeat
+                and plan_repeat_uniform(active_plan(cfg, rt), cfg))
+    if use_scan:
+        body = make_body([f"block[{j}]" for j in range(P)])
         if rep_caches is None:
             (x, aux_sum), new_rep = jax.lax.scan(
                 lambda c, p: body(c, (p, None)), (x, aux0), params["layers"]
@@ -202,9 +230,11 @@ def forward(
         new_rep_list = []
         carry = (x, aux0)
         for r in range(cfg.n_repeats):
-            unit_p = jax.tree.map(lambda a: a[r], params["layers"])
+            unit_p = (params["layers"][f"r{r}"] if per_repeat
+                      else jax.tree.map(lambda a: a[r], params["layers"]))
             unit_c = (jax.tree.map(lambda a: a[r], rep_caches)
                       if rep_caches is not None else None)
+            body = make_body([f"block[{r * P + j}]" for j in range(P)])
             carry, nc = body(carry, (unit_p, unit_c))
             new_rep_list.append(nc)
         x, aux_sum = carry
@@ -217,7 +247,8 @@ def forward(
     for t, bt in enumerate(cfg.tail):
         tc = caches["tail"][f"tail{t}"] if caches is not None else None
         x, nc, aux = apply_block(bt, params[f"tail{t}"], x, cfg, rt,
-                                 positions, tc, update_cache)
+                                 positions, tc, update_cache,
+                                 site=f"block[{cfg.n_repeats * P + t}]")
         aux_sum = aux_sum + aux
         if new_caches is not None:
             new_caches["tail"][f"tail{t}"] = nc if nc is not None else tc
@@ -233,15 +264,16 @@ def forward(
 
 def _logits(params, x, cfg: ArchConfig, rt: Runtime):
     """x [..., D] -> logits [..., Vp]; keeps token dims data-sharded and the
-    vocab dim TP-sharded (2D flattened-token and 3D [B,S,D] forms)."""
-    qc = rt.quant_cfg(cfg)
+    vocab dim TP-sharded (2D flattened-token and 3D [B,S,D] forms).
+
+    The head quantizes per the plan's "lm_head" site (uniform legacy
+    configs map quantize_embedding=False to a float lm_head rule)."""
     if cfg.tie_embeddings:
         w = params["embed"]["tok"].astype(x.dtype)              # [Vp, D]
         logits = jnp.einsum("...d,vd->...v", x, w)
     else:
         logits = qdense(params["lm_head"]["w"], x,
-                        qc if qc.quantize_embedding else
-                        type(qc)(backend="float"))
+                        rt.quant_cfg(cfg, "lm_head"), tag="lm_head")
     return shard(logits, "act_tv" if logits.ndim == 2 else "act_btv")
 
 

@@ -29,8 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, Runtime, ServingConfig
-from repro.core.qlinear import pack_tree, prepack_tree
-from repro.kernels import autotune, ops
+from repro.core.quant_plan import pack_for_serving
+from repro.kernels import autotune
 from repro.launch.steps import make_serving_steps
 from repro.models import init_caches, init_model
 from repro.serving.kv_pages import (
@@ -45,17 +45,20 @@ from repro.serving.scheduler import Request, Scheduler
 
 
 def build_params(cfg: ArchConfig, rt: Runtime, seed: int = 0):
-    """Init (and, for packed backends, pre-pack) serving weights.
+    """Init (and, for pre-packing sites of the active QuantPlan, pack)
+    serving weights.
 
-    On Pallas backends the packed weights also get their planar K-major
-    twin (`prepack_tree`) so the kernels' nibble unpack is shift/mask only
-    — the relayout is paid once here, never inside a serving step."""
+    Packing is per-site: the plan decides which call sites pre-pack into
+    the int4 nibble format (legacy uniform `--quant w4a4_packed` maps to a
+    uniform plan).  On Pallas backends packed weights also get their planar
+    K-major twin (`prepack_tree`) so the kernels' nibble unpack is
+    shift/mask only — the relayout is paid once here, never inside a
+    serving step.  To serve from a quantized checkpoint instead, pass
+    `checkpoint.restore_quantized(dir, cfg=cfg, rt=rt)[0]` as `params` to
+    the engine — the cfg/rt arguments assert the runtime's active plan
+    matches the plan the checkpoint was saved with."""
     params = init_model(jax.random.PRNGKey(seed), cfg)
-    if rt.quant_backend in ("w4a4_packed", "w4a16_packed"):
-        params = pack_tree(params, rt.quant_cfg(cfg))
-        if ops.use_pallas():
-            params = prepack_tree(params)
-    return params
+    return pack_for_serving(params, cfg, rt)
 
 
 class InferenceEngine:
