@@ -6,6 +6,9 @@ system benchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   fig5     -> paper Fig. 5    (area x delay frontier points)
   pipeline -> paper §VI       (pipelined Fmax)
   kernels  -> TPU-adaptation kernels: us/call + GOP/s vs the jnp oracle
+  paged_attn -> fused paged-decode attention vs the gather baseline
+              (tokens/s vs context length at several page sizes) + flash
+              vs chunked prefill
   gemm     -> quantized-GEMM backends (the "multiplier array" system view)
   serving  -> continuous-batching engine: paged vs contiguous KV tokens/s
   sensitivity -> per-site quant sensitivity sweep (one site group floated
@@ -270,6 +273,117 @@ def bench_kernels(do_tune: bool = False):
     _maybe_tune(do_tune, on_tpu)
 
 
+# decode-attention bench geometry: a serving pool provisioned for PA_MAX_CTX
+# tokens/row, timed at several *actual* context lengths — the gather path
+# always pays the full pool bound, the fused path only the live context.
+PA_SHAPE = {"B": 4, "KV": 8, "G": 2, "hd": 64}    # H = 16
+PA_MAX_CTX = 1024
+PA_CTXS = (128, 512, 1024)
+PA_PAGE_SIZES = (4, 16)
+
+
+def bench_paged_attention(do_tune: bool = False):
+    """Fused paged-decode attention vs the paged_read-then-attend baseline
+    (tokens/s vs context length at several page sizes), plus flash vs
+    chunked prefill.  f32 pools: the serving `cache_dtype="float32"` cell,
+    where the dense gather's traffic penalty is fully visible on CPU."""
+    from repro.kernels import autotune, ops
+    from repro.models.attention import attention_core
+    from repro.serving.kv_pages import paged_read
+
+    rng = np.random.default_rng(3)
+    B, KV, G, hd = (PA_SHAPE[k] for k in ("B", "KV", "G", "hd"))
+    H = KV * G
+
+    def gather_attn(q, pk, pv, tbl, last):
+        kf, vf, kpos = paged_read({"tbl": tbl, "k": pk, "v": pv}, last)
+        return attention_core(
+            q[:, None], kf, vf, q_positions=last[:, None], k_positions=kpos,
+            window=0, impl="full", chunk_q=512)
+
+    for ps in PA_PAGE_SIZES:
+        pps = PA_MAX_CTX // ps
+        P = B * pps + 8
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        pk = jnp.asarray(rng.standard_normal((P, ps, KV, hd)), jnp.float32)
+        pv = jnp.asarray(rng.standard_normal((P, ps, KV, hd)), jnp.float32)
+        tbl = jnp.asarray(rng.permutation(P)[:B * pps].reshape(B, pps),
+                          jnp.int32)
+        for ctx in PA_CTXS:
+            last = jnp.full((B,), ctx - 1, jnp.int32)
+            g_us = _time(jax.jit(gather_attn), q, pk, pv, tbl, last)
+            f_us = _time(jax.jit(lambda *a: ops.paged_decode_attention(*a)),
+                         q, pk, pv, tbl, last)
+            tok = lambda us: f"tok_per_s={B / us * 1e6:.0f}"
+            emit(f"kernels.paged_attn.gather.ps{ps}.ctx{ctx}", g_us,
+                 f"{tok(g_us)};max_ctx={PA_MAX_CTX}")
+            emit(f"kernels.paged_attn.fused.ps{ps}.ctx{ctx}", f_us,
+                 f"{tok(f_us)};max_ctx={PA_MAX_CTX}")
+        # summary row from the ROWS minima (consistent under --repeat,
+        # where per-row minima come from different repeats); us=0:
+        # informational, not gate material
+        longest = PA_CTXS[-1]
+        ratio = (ROWS[f"kernels.paged_attn.gather.ps{ps}.ctx{longest}"]["us"]
+                 / ROWS[f"kernels.paged_attn.fused.ps{ps}.ctx{longest}"]["us"])
+        emit(f"kernels.paged_attn.speedup.ps{ps}", 0.0,
+             f"fused_over_gather_at_ctx{longest}={ratio:.2f}x")
+
+        if do_tune:
+            from repro.kernels import paged_attention as pa
+
+            on_tpu = jax.default_backend() == "tpu"
+            last_t = jnp.full((B,), PA_CTXS[-1] - 1, jnp.int32)
+
+            def make_call(b):
+                pp = max(1, b["bk"] // ps)
+                if on_tpu:
+                    return lambda: pa.paged_decode_attention(
+                        q, pk, pv, tbl, last_t, pp=pp, bkv=b["bn"],
+                        interpret=False)
+                return lambda: pa.paged_decode_attention_xla(
+                    q, pk, pv, tbl, last_t, pp=pp)
+
+            blocks, us = autotune.tune(
+                "attn.paged_decode", make_call, B, PA_MAX_CTX, H * hd,
+                "float32", group_size=ps)
+            emit(f"kernels.autotune.attn.paged_decode.ps{ps}", us,
+                 f"bk={blocks['bk']};bn={blocks['bn']}")
+
+    # flash prefill vs the chunked-lax.map baseline (in-flight [S, S] work)
+    S = 512
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    chunked = jax.jit(lambda *a: attention_core(
+        a[0], a[1], a[2], q_positions=a[3], k_positions=a[3],
+        window=0, impl="chunked", chunk_q=128))
+    flash = jax.jit(lambda *a: ops.flash_prefill(a[0], a[1], a[2], a[3], a[3]))
+    c_us = _time(chunked, q, k, v, pos)
+    f_us = _time(flash, q, k, v, pos)
+    emit(f"kernels.paged_attn.prefill_chunked.s{S}", c_us,
+         f"tok_per_s={B * S / c_us * 1e6:.0f}")
+    emit(f"kernels.paged_attn.prefill_flash.s{S}", f_us,
+         f"tok_per_s={B * S / f_us * 1e6:.0f}")
+
+    if do_tune:
+        from repro.kernels import paged_attention as pa
+
+        on_tpu = jax.default_backend() == "tpu"
+
+        def make_prefill_call(b):
+            if on_tpu:
+                return lambda: pa.flash_prefill(
+                    q, k, v, pos, pos, bq=b["bm"], bk=b["bk"], bkv=b["bn"],
+                    interpret=False)
+            return lambda: pa.flash_prefill_xla(q, k, v, pos, pos, bk=b["bk"])
+
+        blocks, us = autotune.tune("attn.prefill", make_prefill_call,
+                                   S, S, H * hd, "bfloat16")
+        emit(f"kernels.autotune.attn.prefill.s{S}", us,
+             f"bm={blocks['bm']};bk={blocks['bk']};bn={blocks['bn']}")
+
+
 def bench_gemm_backends():
     """Quantized linear through every backend (system view of the paper)."""
     from repro.core.qlinear import QuantConfig, qdense
@@ -390,6 +504,7 @@ SECTIONS = {
     "fig5": bench_fig5,
     "pipeline": bench_pipeline,
     "kernels": bench_kernels,
+    "paged_attn": bench_paged_attention,
     "gemm": bench_gemm_backends,
     "serving": bench_serving,
     "sensitivity": bench_sensitivity,
@@ -424,6 +539,8 @@ def main(argv=None) -> int:
         for name in sections:
             if name == "kernels":
                 bench_kernels(do_tune=do_tune and rep == 0)
+            elif name == "paged_attn":
+                bench_paged_attention(do_tune=do_tune and rep == 0)
             else:
                 SECTIONS[name]()
 

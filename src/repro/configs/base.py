@@ -153,8 +153,14 @@ class Runtime:
     """Execution knobs — §Perf levers; never change model math."""
 
     scan_layers: bool = True
-    attn_impl: str = "chunked"      # chunked | full
+    attn_impl: str = "chunked"      # chunked | full | flash (tiled online-
+                                    # softmax kernel, kernels.paged_attention)
     attn_chunk_q: int = 512
+    # paged-KV decode attention: "fused" consumes pages in place through the
+    # kernels.ops.paged_decode_attention dispatch (Pallas on TPU, XLA twin
+    # elsewhere); "gather" is the paged_read-then-attend baseline the
+    # bit-exactness harness compares against.
+    paged_attn: str = "fused"
     loss_chunk: int = 4096          # 0 = unchunked
     remat: str = "dots"             # none | dots | full
     # DEPRECATED: uniform backend-string override (kept working — it maps to

@@ -5,6 +5,9 @@ int4_matmul   -- W4A4 planar-nibble MXU matmul (+ fused activation-quantize
                  variant) with fused dequant epilogue
 w4a16_matmul  -- weight-only int4 serving matmul, activation-dtype MXU
                  contraction with scales folded into the epilogue
+paged_attention -- fused paged-KV decode attention (reads pool pages in
+                 place via scalar-prefetched block tables, online softmax)
+                 + tiled flash prefill, with bit-exact XLA twins
 packing       -- shared nibble pack/unpack layer (interleaved serialization
                  vs planar K-major kernel layout) + prepacked-weight cache
 autotune      -- per-shape (bm, bn, bk) tile search with an on-disk cache

@@ -99,6 +99,54 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+#: attention ops reuse the (bm, bn, bk) entry format with attention
+#: semantics — bk = kv tokens per program (for ``attn.paged_decode`` that is
+#: pages_per_program * page_size, with page_size riding in the key's
+#: group_size slot), bn = KV-head tile (0 = all heads, kernels self-heal to
+#: a divisor), bm = q tile (prefill only; decode has one query token).
+ATTN_OPS = ("attn.paged_decode", "attn.prefill")
+
+
+def attn_default_blocks(op: str, M: int, K: int, N: int,
+                        group_size: int = 0) -> Dict[str, int]:
+    """Heuristic tiles for the attention ops (shapes: M = batch rows or q
+    length, K = kv context length, N = H * hd)."""
+    if op == "attn.paged_decode":
+        ps = max(1, group_size)
+        # small pages pay per-page gather overhead: cap the block at ~256
+        # tokens so the XLA twin's page index stays narrow; larger pages
+        # amortize and take 512-token blocks
+        target = 256 if ps < 8 else 512
+        bk = max(ps, min(_round_up(K, ps), _round_up(target, ps)))
+        return {"bm": 1, "bn": 0, "bk": bk}
+    bq = 128 if M >= 128 else max(8, _round_up(M, 8))
+    bk = 128 if K >= 128 else max(8, _round_up(K, 8))
+    return {"bm": bq, "bn": 0, "bk": bk}
+
+
+def attn_candidate_blocks(op: str, M: int, K: int, N: int,
+                          group_size: int = 0) -> List[Dict[str, int]]:
+    """Search space for the attention ops: kv-tokens-per-program x KV-head
+    tiling (and q tiling for prefill)."""
+    out, seen = [], set()
+    if op == "attn.paged_decode":
+        ps = max(1, group_size)
+        bks = sorted({max(ps, min(_round_up(K, ps), ps * pp))
+                      for pp in (1, 4, 8, 32, 128)})
+        bms = [1]
+    else:
+        bks = sorted({min(_round_up(K, 8), b) for b in (64, 128, 256)})
+        bms = sorted({min(_round_up(max(M, 8), 8), b) for b in (64, 128, 256)})
+    for bm in bms:
+        for bn in (0, 2, 4):                       # head tile: all, 2, 4
+            for bk in bks:
+                key = (bm, bn, bk)
+                if key not in seen:
+                    seen.add(key)
+                    out.append({"bm": bm, "bn": bn, "bk": bk})
+    return out
+
+
 def default_blocks(M: int, K: int, N: int, group_size: int = 0) -> Dict[str, int]:
     """Shape-clipped MXU-aligned defaults.
 
@@ -148,6 +196,8 @@ def get_blocks(op: str, M: int, K: int, N: int, dtype: str,
         if hit is not None:
             return {"bm": int(hit["bm"]), "bn": int(hit["bn"]),
                     "bk": int(hit["bk"])}
+    if op in ATTN_OPS:
+        return attn_default_blocks(op, M, K, N, group_size)
     return default_blocks(M, K, N, group_size)
 
 
@@ -187,8 +237,12 @@ def tune(op: str, make_call: Callable[[Dict[str, int]], Callable[[], object]],
     or run is skipped, not fatal.  Returns (best_blocks, best_us).
     """
     ensure_loaded()
-    cands = list(candidates) if candidates is not None \
-        else candidate_blocks(M, K, N, group_size)
+    if candidates is not None:
+        cands = list(candidates)
+    elif op in ATTN_OPS:
+        cands = attn_candidate_blocks(op, M, K, N, group_size)
+    else:
+        cands = candidate_blocks(M, K, N, group_size)
     best, best_us = None, float("inf")
     for blocks in cands:
         try:
@@ -201,7 +255,9 @@ def tune(op: str, make_call: Callable[[Dict[str, int]], Callable[[], object]],
         # every candidate failed: fall back to defaults but do NOT persist —
         # float("inf") is not valid JSON and a dead entry would shadow a
         # future successful search
-        return default_blocks(M, K, N, group_size), float("inf")
+        fallback = (attn_default_blocks(op, M, K, N, group_size)
+                    if op in ATTN_OPS else default_blocks(M, K, N, group_size))
+        return fallback, float("inf")
     entry = {**best, "us": best_us}
     _CACHE[cache_key(op, M, K, N, dtype, group_size, tag=tag)] = entry
     if tag:                                # untagged key serves other sites

@@ -29,7 +29,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from . import autotune, packing, ref
+from . import autotune, packing, paged_attention, ref
 from .int4_matmul import int4_matmul as _int4_matmul
 from .int4_matmul import int4_matmul_fused as _int4_matmul_fused
 from .lut_mul4 import lut_mul4 as _lut_mul4
@@ -173,6 +173,55 @@ def w4a16_matmul_kmajor(x, w_kmajor, w_scale, group_size: int,
                 {"bm": bm, "bn": bn, "bk": bk})
     return _w4a16_matmul(x, w_kmajor, w_scale, group_size,
                          interpret=m == _INTERPRET, **b)
+
+
+def paged_decode_attention(q, k_pool, v_pool, tbl, last_pos,
+                           k_scale=None, v_scale=None, *, window: int = 0,
+                           interpret: Optional[bool] = None, tag: str = ""):
+    """Fused decode attention over the KV page pool (no gather, no dense
+    [B, max_ctx] KV materialization).
+
+    q [B, H, hd]; pools [P, ps, KV, hd(/2)] (+ per-token scales when the
+    cache is int8/int4); tbl [B, pages_per_seq]; last_pos [B] (-1 = inactive
+    row, masked to a zero output).  Tiles resolve through ``kernels.autotune``
+    op ``attn.paged_decode`` — page size rides in the key's group_size slot,
+    ``bk`` is kv tokens per program, ``bn`` the KV-head tile.
+    """
+    m = _mode(interpret)
+    B, H, hd = q.shape
+    ps = k_pool.shape[1]
+    max_ctx = tbl.shape[1] * ps
+    b = autotune.get_blocks("attn.paged_decode", B, max_ctx, H * hd,
+                            jnp.dtype(k_pool.dtype).name, group_size=ps,
+                            tag=tag)
+    pp = max(1, b["bk"] // ps)
+    if m == _XLA:
+        return paged_attention.paged_decode_attention_xla(
+            q, k_pool, v_pool, tbl, last_pos, k_scale, v_scale,
+            window=window, pp=pp)
+    return paged_attention.paged_decode_attention(
+        q, k_pool, v_pool, tbl, last_pos, k_scale, v_scale,
+        window=window, pp=pp, bkv=b["bn"], interpret=m == _INTERPRET)
+
+
+def flash_prefill(q, k, v, q_positions, k_positions, *, window: int = 0,
+                  interpret: Optional[bool] = None, tag: str = ""):
+    """Tiled flash prefill with causal/validity masking: scores only exist
+    as [bq, bk] tiles (online softmax), never as the [S, S] matrix.
+
+    q [B, Sq, H, hd]; k/v [B, Skv, KV, hd]; positions [B, S] (-1 = pad).
+    Tiles resolve through ``kernels.autotune`` op ``attn.prefill``.
+    """
+    m = _mode(interpret)
+    B, Sq, H, hd = q.shape
+    b = autotune.get_blocks("attn.prefill", Sq, k.shape[1], H * hd,
+                            jnp.dtype(q.dtype).name, tag=tag)
+    if m == _XLA:
+        return paged_attention.flash_prefill_xla(
+            q, k, v, q_positions, k_positions, window=window, bk=b["bk"])
+    return paged_attention.flash_prefill(
+        q, k, v, q_positions, k_positions, window=window,
+        bq=b["bm"], bk=b["bk"], bkv=b["bn"], interpret=m == _INTERPRET)
 
 
 def _quantize_rows(x):

@@ -3,8 +3,10 @@
 Drives the repro.serving engine with synthetic Poisson traffic (mixed
 prompt/generation lengths) and prints a JSON report with tokens/s and
 p50/p95 per-request latency.  `--layout compare` runs the same trace through
-the paged and contiguous KV layouts and verifies the generated tokens are
-bit-identical.
+three attention paths — contiguous KV, paged KV with the gather
+(`paged_read`-then-attend) baseline, and paged KV with the fused
+paged-attention kernel — and verifies the generated tokens are
+bit-identical across all three.
 
 Mixed precision: `--quant-plan <name|path|inline>` serves under any
 site-addressable QuantPlan (core.quant_plan).  `--quantized-ckpt` proves the
@@ -25,6 +27,7 @@ bit-identical logits/tokens against the same plan applied to float masters.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import tempfile
@@ -108,14 +111,17 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
     if layout is None:   # paged needs a pure-attention stack (SSM doesn't page)
         blocks = tuple(cfg.pattern) + tuple(cfg.tail)
         layout = "paged" if all(bt == "A" for bt in blocks) else "contiguous"
-    rt = Runtime(scan_layers=True, attn_impl="chunked",
+    rt = Runtime(scan_layers=True, attn_impl="flash",
                  attn_chunk_q=min(512, max_ctx), loss_chunk=0,
                  quant_backend=None if quant_plan else quant_backend,
                  quant_plan=quant_plan, cache_dtype=cache_dtype,
                  remat="none")
     trace = poisson_trace(requests, rate, prompt_lens, gen_lens,
                           cfg.vocab, seed=seed)
-    layouts = (["paged", "contiguous"] if layout == "compare" else [layout])
+    # "paged" serves through the fused paged-attention kernel;
+    # "paged_gather" is the same layout through the paged_read baseline
+    layouts = (["paged", "paged_gather", "contiguous"]
+               if layout == "compare" else [layout])
 
     report = {"arch": arch, "reduced": reduced,
               "quant": quant_plan or quant_backend, "cache_dtype": cache_dtype,
@@ -138,12 +144,16 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
 
     tokens_by_layout = {}
     for lay in layouts:
-        sv = ServingConfig(layout=lay, max_batch=max_batch,
+        kv_layout = "paged" if lay == "paged_gather" else lay
+        rt_lay = (dataclasses.replace(rt, paged_attn="gather")
+                  if lay == "paged_gather" else rt)
+        sv = ServingConfig(layout=kv_layout, max_batch=max_batch,
                            page_size=page_size, num_pages=num_pages,
                            max_ctx=max_ctx)
-        engine = InferenceEngine(cfg, rt, sv, params=params)
+        engine = InferenceEngine(cfg, rt_lay, sv, params=params)
         engine.warmup(prompt_lens)     # compiles excluded from the stats
         stats, finished = run_trace(engine, trace)
+        stats["profile"] = engine.profile()   # attn vs GEMM attribution
         report[lay] = stats
         tokens_by_layout[lay] = [r.tokens for r in finished]
 
@@ -165,10 +175,11 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
         report["sensitivity"] = sensitivity_sweep(cfg, seed=seed)
 
     if layout == "compare":
-        same = tokens_by_layout["paged"] == tokens_by_layout["contiguous"]
+        ref_tokens = tokens_by_layout[layouts[0]]
+        same = all(tokens_by_layout[lay] == ref_tokens for lay in layouts[1:])
         report["bit_identical"] = bool(same)
         if not same:
-            # only the paged layout preempts; with a lossy KV dtype the
+            # only the paged layouts preempt; with a lossy KV dtype the
             # recompute-resume re-attends in full precision, so argmax can
             # legitimately diverge (EXPERIMENTS.md §Serving)
             if (cache_dtype in ("int8", "int4")
@@ -177,8 +188,11 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
                                   "lossy KV-cache dtype: recomputed prefixes "
                                   "attend in full precision — expected")
             else:
+                diverged = [lay for lay in layouts[1:]
+                            if tokens_by_layout[lay] != ref_tokens]
                 raise SystemExit(
-                    "FAIL: paged and contiguous decode diverged")
+                    f"FAIL: decode diverged across attention paths "
+                    f"({layouts[0]} vs {diverged})")
     # headline numbers from the primary layout
     primary = report[layouts[0]]
     report["tokens_per_s"] = primary["decode_tok_per_s"]

@@ -65,17 +65,55 @@ def make_decode_step(cfg: ArchConfig, rt: Runtime):
     return step
 
 
-def make_serving_steps(cfg: ArchConfig, rt: Runtime):
+def make_serving_steps(cfg: ArchConfig, rt: Runtime, paged: bool = False):
     """(jit'd prefill, jit'd decode) for the continuous-batching engine.
 
     Both donate the cache argument (the KV pool is the dominant buffer and
-    is threaded through every step).  jit re-specializes per input shape, so
-    the engine's batch/prompt bucketing bounds the number of compilations —
-    one per (bucket) signature, cached across the serving run.
+    is threaded through every step) and run greedy argmax *inside* the jit,
+    so the only device->host traffic per step is one int32 per row.  jit
+    re-specializes per input shape, so the engine's batch/prompt bucketing
+    bounds the number of compilations — one per (bucket) signature, cached
+    across the serving run.
+
+    ``paged=True`` returns steps that additionally take the engine's
+    device-resident block-table pool (``tbl_all`` [max_batch, pages_per_seq])
+    and the step's slot ids: the per-row tables are gathered and bound to
+    every layer inside the jit, so the host never assembles a block table
+    per step — rows move host->device only when a request is admitted or
+    its allocation grows.
     """
-    prefill = jax.jit(make_prefill_step(cfg, rt), donate_argnums=(2,))
-    decode = jax.jit(make_decode_step(cfg, rt), donate_argnums=(2,))
-    return prefill, decode
+    vocab = cfg.vocab
+
+    def _greedy(logits):
+        return jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+
+    if paged:
+        from repro.serving.kv_pages import with_block_tables
+
+        def prefill_step(params, tokens, caches, positions, tbl_all, slots):
+            caches = with_block_tables(caches, jnp.take(tbl_all, slots, 0))
+            logits, caches = prefill_fn(params, tokens, cfg, rt, caches,
+                                        positions)
+            return _greedy(logits), caches
+
+        def dec_step(params, token, caches, positions, tbl_all, slots):
+            caches = with_block_tables(caches, jnp.take(tbl_all, slots, 0))
+            logits, caches = decode_step(params, token, cfg, rt, caches,
+                                         positions)
+            return _greedy(logits), caches
+    else:
+        def prefill_step(params, tokens, caches, positions):
+            logits, caches = prefill_fn(params, tokens, cfg, rt, caches,
+                                        positions)
+            return _greedy(logits), caches
+
+        def dec_step(params, token, caches, positions):
+            logits, caches = decode_step(params, token, cfg, rt, caches,
+                                         positions)
+            return _greedy(logits), caches
+
+    return (jax.jit(prefill_step, donate_argnums=(2,)),
+            jax.jit(dec_step, donate_argnums=(2,)))
 
 
 # ------------------------------------------------------------ input specs --

@@ -212,11 +212,22 @@ def attention_core(
     window: int,
     impl: str,
     chunk_q: int,
+    tag: str = "",
 ) -> jnp.ndarray:
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
     tp = tp_size()
     batch_sharded = B > 1
+    if impl == "flash" and tp <= 1:
+        # tiled online-softmax prefill (kernels.paged_attention): scores
+        # only ever exist as [bq, bk] tiles.  TP runs keep the sharded
+        # chunked path — the flash kernel carries no partition constraints.
+        from repro.kernels import ops
+
+        return ops.flash_prefill(q, k, v, q_positions, k_positions,
+                                 window=window, tag=tag)
+    if impl == "flash":
+        impl = "chunked"
     if tp > 1 and KV % tp != 0 and H % tp == 0:
         # Megatron-style KV-head duplication: q-heads shard on TP, each
         # shard holds copies of the KV heads it needs (no cross-shard math).
@@ -298,14 +309,30 @@ def apply_attention(
         from repro.serving.kv_pages import paged_read, paged_write
 
         if S == 1:
-            # decode: write through the block table, gather own pages back
             new_cache = paged_write(cache, k, v, tpos)
-            kf, vf, kpos = paged_read(new_cache, tpos[:, -1])
-            out = attention_core(
-                q, kf, vf,
-                q_positions=tpos, k_positions=kpos,
-                window=cfg.local_window, impl="full", chunk_q=rt.attn_chunk_q,
-            )
+            if rt.paged_attn == "fused" and tp_size() <= 1:
+                # decode: consume the pages where they live — the fused
+                # kernel walks the block table with online-softmax
+                # accumulation; no paged_read, no dense KV materialization
+                from repro.kernels import ops
+
+                out = ops.paged_decode_attention(
+                    q[:, 0], new_cache["k"], new_cache["v"],
+                    new_cache["tbl"], tpos[:, -1],
+                    new_cache.get("k_scale"), new_cache.get("v_scale"),
+                    window=cfg.local_window,
+                    tag=join_site(site, "attn.paged_decode"),
+                )[:, None]
+            else:
+                # gather baseline (and TP fallback): reconstruct the dense
+                # layout, attend over it — the bit-exactness reference
+                kf, vf, kpos = paged_read(new_cache, tpos[:, -1])
+                out = attention_core(
+                    q, kf, vf,
+                    q_positions=tpos, k_positions=kpos,
+                    window=cfg.local_window, impl="full",
+                    chunk_q=rt.attn_chunk_q,
+                )
         else:
             # prefill: the prompt is the whole context — attend in-flight,
             # write it into the pages for later decode steps
@@ -313,7 +340,7 @@ def apply_attention(
                 q, k, v,
                 q_positions=tpos, k_positions=tpos,
                 window=cfg.local_window, impl=rt.attn_impl,
-                chunk_q=rt.attn_chunk_q,
+                chunk_q=rt.attn_chunk_q, tag=join_site(site, "attn.prefill"),
             )
             if update_cache:
                 new_cache = paged_write(cache, k, v, tpos)
@@ -333,6 +360,7 @@ def apply_attention(
             q, k, v,
             q_positions=tpos, k_positions=tpos,
             window=cfg.local_window, impl=rt.attn_impl, chunk_q=rt.attn_chunk_q,
+            tag=join_site(site, "attn.prefill"),
         )
         if update_cache and cache is not None:
             size = cache["k"].shape[1]
@@ -340,8 +368,17 @@ def apply_attention(
             # prefill fills a contiguous, non-wrapping range: DUS-safe when
             # batch-aligned (ring wrap only matters once pos > size, i.e.
             # decode, which writes single slots)
+            wpos = tpos[:, -take:]
+            if not rt.aligned_decode:
+                # chunked prefill can re-present already-cached positions
+                # (a resume landing mid-way through a partial page): write
+                # only the uncovered suffix — covered slots are routed to
+                # the drop sentinel instead of re-scattered.  The aligned
+                # path keeps its single DUS (a -1 would skew its start slot
+                # and clamp the write onto the ring tail).
+                wpos = jnp.where(wpos >= cache["pos"][:, None], wpos, -1)
             new_cache = _cache_write(
-                cache, k[:, -take:], v[:, -take:], tpos[:, -take:],
+                cache, k[:, -take:], v[:, -take:], wpos,
                 aligned=rt.aligned_decode,
             )
             new_cache["pos"] = cache["pos"] + S

@@ -12,11 +12,18 @@ attention masks them and their cache writes are dropped) — so paged and
 contiguous runs of the same trace execute the same program shapes and the
 same per-row math.  The layouts differ only in where KV bytes live:
 
-  * paged      -- pool + block tables travel with the batch; joining/leaving
-                  requests exchange a [pages_per_seq] int row, never KV data.
+  * paged      -- pool + block tables live on device; the whole decode step
+                  is one jit (table gather + forward + fused paged attention
+                  + greedy argmax) with the cache pool donated through it.
+                  Block-table rows move host->device only when a request is
+                  admitted or its page allocation grows — never per step.
   * contiguous -- each slot owns a max_ctx row; admission scatters a freshly
                   prefilled row into the full cache (an O(cache) copy that the
                   paged layout exists to avoid — see EXPERIMENTS.md §Serving).
+
+`profile()` attributes one decode step's cost: the attention op is timed
+standalone (the same kernels.ops dispatch the model executes) against the
+full step time, so perf PRs can tell attention regressions from GEMM ones.
 """
 
 from __future__ import annotations
@@ -86,18 +93,24 @@ class InferenceEngine:
         if sv.layout == "paged":
             self.kv = PagedKVCacheManager(sv)
             # batch=0 template: pool leaves are batch-independent; block
-            # tables are rebound per call via with_block_tables
+            # tables are rebound per call (inside the jit'd steps) from the
+            # device-resident [max_batch, pages_per_seq] table pool
             self.caches = init_paged_caches(cfg, rt, 0, sv)
+            self._tbl = jnp.zeros((sv.max_batch, sv.pages_per_seq), jnp.int32)
+            self._tbl0 = np.zeros((0, sv.pages_per_seq), np.int32)
+            self._tbl_ver: Dict[int, int] = {}   # rid -> uploaded page count
         else:
             self.kv = ContinuousKVCache(sv)
             self.caches = init_caches(cfg, rt, batch=sv.max_batch,
                                       seq=sv.max_ctx)
         self.scheduler = Scheduler(self.kv, sv.max_batch)
-        # tuned (bm, bn, bk) tiles for every prefill/decode GEMM: qdense
-        # resolves blocks through kernels.autotune at trace time, so loading
-        # the cache before the first compile is all the wiring needed
+        # tuned (bm, bn, bk) tiles for every prefill/decode GEMM and for the
+        # fused paged-attention kernels: qdense and kernels.ops resolve
+        # blocks through kernels.autotune at trace time, so loading the
+        # cache before the first compile is all the wiring needed
         autotune.ensure_loaded()
-        self._prefill, self._decode = make_serving_steps(cfg, rt)
+        self._prefill, self._decode = make_serving_steps(
+            cfg, rt, paged=sv.layout == "paged")
 
         self._next_rid = 0
         self._finished: List[Request] = []
@@ -107,6 +120,7 @@ class InferenceEngine:
         self.n_decode_tokens = 0
         self.n_prefill_tokens = 0
         self.t_start = None
+        self._profile: Optional[Dict] = None
 
     # -------------------------------------------------------------- api --
     def submit(self, prompt, max_new: int, arrival: Optional[float] = None,
@@ -138,10 +152,10 @@ class InferenceEngine:
             tokens = jnp.zeros((1, L), jnp.int32)
             positions = jnp.full((1, L), -1, jnp.int32)
             if self.sv.layout == "paged":
-                caches = with_block_tables(
-                    self.caches, np.zeros((1, self.sv.pages_per_seq)))
-                _, self.caches = self._prefill(self.params, tokens, caches,
-                                               positions)
+                _, self.caches = self._prefill(
+                    self.params, tokens, self.caches, positions,
+                    self._tbl, jnp.zeros((1,), jnp.int32))
+                self._strip_tables()
             else:
                 row = init_caches(self.cfg, self.rt, batch=1,
                                   seq=self.sv.max_ctx)
@@ -150,9 +164,10 @@ class InferenceEngine:
             tok = jnp.zeros((nb, 1), jnp.int32)
             pos = jnp.full((nb, 1), -1, jnp.int32)
             if self.sv.layout == "paged":
-                caches = with_block_tables(
-                    self.caches, np.zeros((nb, self.sv.pages_per_seq)))
-                _, self.caches = self._decode(self.params, tok, caches, pos)
+                _, self.caches = self._decode(
+                    self.params, tok, self.caches, pos,
+                    self._tbl, jnp.zeros((nb,), jnp.int32))
+                self._strip_tables()
             else:
                 sub = gather_rows(self.caches, [0] * nb)
                 self._decode(self.params, tok, sub, pos)
@@ -193,9 +208,27 @@ class InferenceEngine:
         SSM/LRU state integrates pad tokens, so those prefill at exact L."""
         return self.sv.prompt_bucket(L) if self._all_attention else L
 
-    def _greedy(self, logits) -> np.ndarray:
-        return np.asarray(
-            jnp.argmax(logits[:, : self.cfg.vocab], axis=-1), np.int32)
+    def _strip_tables(self) -> None:
+        """Rebind the batch-0 table template after a paged step so the
+        stored cache tree's signature never depends on the last bucket."""
+        self.caches = with_block_tables(self.caches, self._tbl0)
+
+    def _sync_tables(self, batch: List[Request]) -> None:
+        """Upload block-table rows whose page allocation changed since the
+        last upload (admission, page growth).  This is the only host->device
+        block-table traffic — steady-state decode uploads nothing."""
+        for req in batch:
+            n = len(self.kv.pages.get(req.rid, ()))
+            if self._tbl_ver.get(req.rid) != n:
+                self._tbl = self._tbl.at[req.slot].set(
+                    jnp.asarray(self.kv.table_row(req.rid)))
+                self._tbl_ver[req.rid] = n
+        # drop versions of finished/preempted requests: a preempted rid that
+        # re-admits with the same page *count* must still re-upload (its
+        # page ids changed), and dead entries must not accumulate
+        running = self.scheduler.running
+        for rid in [r for r in self._tbl_ver if r not in running]:
+            del self._tbl_ver[rid]
 
     def _prefill_request(self, req: Request) -> None:
         """Prefill a (re-)admitted request's full prefix (batch of one,
@@ -209,22 +242,23 @@ class InferenceEngine:
         positions = (np.arange(Lb, dtype=np.int32) - (Lb - L))[None, :]
 
         if self.sv.layout == "paged":
-            caches = with_block_tables(self.caches,
-                                       self.kv.table_row(req.rid)[None])
-            logits, self.caches = self._prefill(
-                self.params, jnp.asarray(tokens), caches,
-                jnp.asarray(positions))
+            self._sync_tables([req])
+            tok, self.caches = self._prefill(
+                self.params, jnp.asarray(tokens), self.caches,
+                jnp.asarray(positions), self._tbl,
+                jnp.asarray([req.slot], jnp.int32))
+            self._strip_tables()
         else:
             # a fresh init row IS the reset: prefill into it, then scatter
             # the row into the slot (evicting any previous tenant's state)
             row = init_caches(self.cfg, self.rt, batch=1, seq=self.sv.max_ctx)
-            logits, row = self._prefill(
+            tok, row = self._prefill(
                 self.params, jnp.asarray(tokens), row, jnp.asarray(positions))
             self.caches = scatter_rows(self.caches, row, [req.slot])
 
         req.n_cached = L
         self.n_prefill_tokens += L
-        req.tokens.append(int(self._greedy(logits)[0]))
+        req.tokens.append(int(tok[0]))
         if req.t_first is None:
             req.t_first = self.clock()
 
@@ -239,27 +273,138 @@ class InferenceEngine:
             pos[i, 0] = req.n_cached        # ... at the next cache position
 
         if self.sv.layout == "paged":
-            tbl = np.stack([self.kv.table_row(r.rid) for r in batch]
-                           + [np.zeros(self.sv.pages_per_seq, np.int32)]
-                           * (nb - n))
-            caches = with_block_tables(self.caches, tbl)
-            logits, self.caches = self._decode(
-                self.params, jnp.asarray(tok), caches, jnp.asarray(pos))
+            # pad rows point at slot 0: their positions are -1, so writes
+            # drop and their (masked) attention output is discarded
+            self._sync_tables(batch)
+            slots = np.zeros((nb,), np.int32)
+            slots[:n] = [r.slot for r in batch]
+            nxt, self.caches = self._decode(
+                self.params, jnp.asarray(tok), self.caches,
+                jnp.asarray(pos), self._tbl, jnp.asarray(slots))
+            self._strip_tables()
         else:
             rows = [r.slot for r in batch] \
                 + [self.sv.max_batch - 1] * (nb - n)   # pads write nothing
             sub = gather_rows(self.caches, rows)
-            logits, sub = self._decode(
+            nxt, sub = self._decode(
                 self.params, jnp.asarray(tok), sub, jnp.asarray(pos))
             # scatter only the active rows back (a pad row may alias an
             # active slot, and duplicate scatter indices would race)
             self.caches = scatter_rows(
                 self.caches, gather_rows(sub, np.arange(n)), rows[:n])
-        nxt = self._greedy(logits)
+        nxt = np.asarray(nxt)
         for i, req in enumerate(batch):
             req.n_cached += 1
             req.tokens.append(int(nxt[i]))
         self.n_decode_tokens += n
+
+    # ----------------------------------------------------------- profile --
+    def profile(self, reps: int = 3) -> Dict:
+        """Attribute one full-context decode step's cost: the whole jit'd
+        step is timed against the attention op alone (the same kernels.ops
+        dispatch the model traces), so a perf regression can be pinned on
+        attention vs the GEMM/rest of the step.  Call when idle — the probe
+        steps write through (stale) block tables and scratch the pool.
+        The result lands in ``stats()["profile"]``."""
+        import time as _time
+
+        def _best_us(fn):
+            jax.block_until_ready(fn())
+            ts = []
+            for _ in range(reps):
+                t0 = _time.perf_counter()
+                jax.block_until_ready(fn())
+                ts.append((_time.perf_counter() - t0) * 1e6)
+            return float(min(ts))
+
+        nb = self.sv.max_batch
+        cfg, sv = self.cfg, self.sv
+        tok = jnp.zeros((nb, 1), jnp.int32)
+        pos = jnp.full((nb, 1), sv.max_ctx - 1, jnp.int32)
+        last = jnp.full((nb,), sv.max_ctx - 1, jnp.int32)
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((nb, cfg.n_heads, cfg.hd)),
+                        jnp.bfloat16)
+
+        if sv.layout == "paged":
+            def step():
+                nxt, self.caches = self._decode(
+                    self.params, tok, self.caches, pos, self._tbl,
+                    jnp.zeros((nb,), jnp.int32))
+                self._strip_tables()
+                return nxt
+        else:
+            rows = list(range(nb))
+
+            def step():
+                sub = gather_rows(self.caches, rows)
+                nxt, sub = self._decode(self.params, tok, sub, pos)
+                self.caches = scatter_rows(self.caches, sub, rows)
+                return nxt
+
+        # time the step first: it donates the cache pool, so the attention
+        # probe must capture its pool references afterwards
+        step_us = _best_us(step)
+
+        from repro.models.attention import _cache_read, attention_core
+        layer = jax.tree.map(lambda l: l[0], self.caches["rep"])
+        attn = next((blk["attn"] for blk in layer.values() if "attn" in blk),
+                    None)
+        if attn is None:
+            # SSM/LRU stack: no attention blocks to attribute — the whole
+            # step is GEMM + recurrence
+            self._profile = {
+                "decode_step_us": round(step_us, 1),
+                "attn_us": 0.0,
+                "gemm_other_us": round(step_us, 1),
+                "attn_frac": 0.0,
+            }
+            return self._profile
+        if sv.layout == "paged":
+            from repro.kernels import ops
+            from repro.serving.kv_pages import paged_read
+
+            tbl = self._tbl[:nb]
+            if self.rt.paged_attn == "fused":
+                def attn_op():
+                    return ops.paged_decode_attention(
+                        q, attn["k"], attn["v"], tbl, last,
+                        attn.get("k_scale"), attn.get("v_scale"),
+                        window=cfg.local_window)
+            else:
+                def attn_op():
+                    kf, vf, kpos = paged_read(dict(attn, tbl=tbl), last)
+                    return attention_core(
+                        q[:, None], kf, vf, q_positions=last[:, None],
+                        k_positions=kpos, window=cfg.local_window,
+                        impl="full", chunk_q=self.rt.attn_chunk_q)
+        else:
+            attn = {k_: v_[:nb] for k_, v_ in attn.items() if k_ != "pos"}
+            # every cached slot marked valid: the probe times a full-window
+            # attention regardless of how much real state the run left
+            # behind (kpos carries the ring size, which is < max_ctx for
+            # sliding-window configs)
+            kpos = jnp.broadcast_to(
+                jnp.arange(attn["kpos"].shape[1], dtype=jnp.int32),
+                attn["kpos"].shape)
+            attn.pop("kpos")
+
+            def attn_op():
+                kf, vf = _cache_read(attn)
+                return attention_core(
+                    q[:, None], kf, vf, q_positions=last[:, None],
+                    k_positions=kpos, window=cfg.local_window,
+                    impl="full", chunk_q=self.rt.attn_chunk_q)
+
+        attn_us = _best_us(jax.jit(attn_op)) * cfg.n_layers
+        self._profile = {
+            "decode_step_us": round(step_us, 1),
+            "attn_us": round(attn_us, 1),
+            "gemm_other_us": round(max(step_us - attn_us, 0.0), 1),
+            "attn_frac": round(min(attn_us / step_us, 1.0), 4)
+            if step_us else None,
+        }
+        return self._profile
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> Dict:
@@ -282,4 +427,7 @@ class InferenceEngine:
             "ttft_p50_s": pct(ttft, 50),
             "ttft_p95_s": pct(ttft, 95),
             "kv_pages_high_water": getattr(self.kv, "high_water", 0),
+            "paged_attn": self.rt.paged_attn
+            if self.sv.layout == "paged" else None,
+            **({"profile": self._profile} if self._profile else {}),
         }

@@ -79,18 +79,21 @@ def init_paged_caches(cfg: ArchConfig, rt: Runtime, batch: int,
 def paged_write(cache: Dict, k, v, abs_pos) -> Dict:
     """Write k/v [B, n, KV, hd] at absolute positions abs_pos [B, n] through
     the block table.  Negative positions (left-pad / inactive rows) are routed
-    to an out-of-bounds flat index and dropped."""
+    to an out-of-bounds page index and dropped.
+
+    One batched 2D scatter per pool leaf — no per-row host loop and no flat
+    reshape round-trip, so when the pool rides through a jit with the cache
+    argument donated (launch.steps.make_serving_steps) XLA updates the
+    donated buffer in place instead of copying it."""
     P, ps = cache["k"].shape[:2]
     tbl = cache["tbl"]
     logical = jnp.clip(abs_pos // ps, 0, tbl.shape[1] - 1)       # [B, n]
     phys = jnp.take_along_axis(tbl, logical, axis=1)
-    flat = jnp.where(abs_pos >= 0, phys * ps + abs_pos % ps, P * ps)
+    page = jnp.where(abs_pos >= 0, phys, P)                      # P => dropped
+    slot = abs_pos % ps                                          # in [0, ps)
 
     def write(pool, val):
-        fp = pool.reshape(P * ps, *pool.shape[2:])
-        fp = fp.at[flat.reshape(-1)].set(
-            val.reshape(-1, *val.shape[2:]).astype(pool.dtype), mode="drop")
-        return fp.reshape(pool.shape)
+        return pool.at[page, slot].set(val.astype(pool.dtype), mode="drop")
 
     out = dict(cache)
     if "k_scale" in cache:

@@ -1,0 +1,267 @@
+"""Fused paged-attention kernels: parity with the gather-then-attend
+reference across page sizes, ragged contexts, cache dtypes, and window
+masking; flash prefill vs the dense core; engine-level bit-exactness of the
+fused path including a preempt->resume trace; autotune attn tags."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import Runtime, ServingConfig, get_config
+from repro.kernels import autotune, ops
+from repro.kernels import paged_attention as pa
+from repro.models.attention import attention_core, quantize_kv
+from repro.serving.api import poisson_trace, run_trace
+from repro.serving.engine import InferenceEngine, build_params
+from repro.serving.kv_pages import paged_read
+
+
+def _pool_setup(rng, B, KV, hd, ps, pps, cache_dtype="bfloat16"):
+    """Random pool + permuted block tables (pages deliberately scattered)."""
+    P = B * pps + 4
+    k32 = jnp.asarray(rng.standard_normal((P, ps, KV, hd)), jnp.float32)
+    v32 = jnp.asarray(rng.standard_normal((P, ps, KV, hd)), jnp.float32)
+    tbl = jnp.asarray(rng.permutation(P)[: B * pps].reshape(B, pps),
+                      jnp.int32)
+    if cache_dtype in ("int8", "int4"):
+        kq, ks = quantize_kv(k32, cache_dtype == "int4")
+        vq, vs = quantize_kv(v32, cache_dtype == "int4")
+        return {"tbl": tbl, "k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    dt = jnp.bfloat16 if cache_dtype == "bfloat16" else jnp.float32
+    return {"tbl": tbl, "k": k32.astype(dt), "v": v32.astype(dt)}
+
+
+def _reference(q, cache, last, window=0):
+    """The gather path: paged_read + dense attention (masked softmax)."""
+    kf, vf, kpos = paged_read(cache, last)
+    return attention_core(
+        q[:, None], kf, vf, q_positions=last[:, None], k_positions=kpos,
+        window=window, impl="full", chunk_q=64)[:, 0]
+
+
+# ----------------------------------------------------------- decode parity --
+@pytest.mark.parametrize("ps,pps", [(1, 16), (4, 8), (16, 2)])
+def test_decode_xla_twin_bit_identical_across_page_sizes(ps, pps):
+    """The XLA twin (what CPU serving executes) must be *bit-identical* to
+    the gather reference for ragged per-row contexts, page-partial
+    positions, and inactive rows."""
+    rng = np.random.default_rng(ps)
+    B, KV, G, hd = 4, 4, 2, 16
+    cache = _pool_setup(rng, B, KV, hd, ps, pps)
+    q = jnp.asarray(rng.standard_normal((B, KV * G, hd)), jnp.bfloat16)
+    # ragged: mid-page, page-boundary, full, inactive
+    last = jnp.asarray([ps * pps // 2 - 1, ps - 1, ps * pps - 1, -1],
+                       jnp.int32)
+    ref = _reference(q, cache, last)
+    out = pa.paged_decode_attention_xla(q, cache["k"], cache["v"],
+                                        cache["tbl"], last, pp=3)
+    act = np.asarray(last) >= 0
+    np.testing.assert_array_equal(np.float32(out)[act], np.float32(ref)[act])
+    # inactive rows are masked to zero (finite, never NaN)
+    assert not np.isnan(np.float32(out)).any()
+    assert (np.float32(out)[~act] == 0).all()
+
+
+@pytest.mark.parametrize("cache_dtype", ["bfloat16", "int8", "int4"])
+def test_decode_xla_twin_quantized_pools(cache_dtype):
+    rng = np.random.default_rng(7)
+    B, KV, G, hd, ps, pps = 3, 4, 2, 16, 4, 6
+    cache = _pool_setup(rng, B, KV, hd, ps, pps, cache_dtype)
+    q = jnp.asarray(rng.standard_normal((B, KV * G, hd)), jnp.bfloat16)
+    last = jnp.asarray([ps * pps - 1, 5, 0], jnp.int32)
+    ref = _reference(q, cache, last)
+    out = pa.paged_decode_attention_xla(
+        q, cache["k"], cache["v"], cache["tbl"], last,
+        cache.get("k_scale"), cache.get("v_scale"), pp=2)
+    np.testing.assert_array_equal(np.float32(out), np.float32(ref))
+
+
+@pytest.mark.parametrize("cache_dtype", ["bfloat16", "int8"])
+def test_decode_pallas_kernel_matches_reference(cache_dtype):
+    """The Pallas kernel (interpret mode) runs single-pass online softmax:
+    tolerance parity with the dense reference, inactive rows masked."""
+    rng = np.random.default_rng(11)
+    B, KV, G, hd, ps, pps = 3, 4, 2, 16, 4, 6
+    cache = _pool_setup(rng, B, KV, hd, ps, pps, cache_dtype)
+    q = jnp.asarray(rng.standard_normal((B, KV * G, hd)), jnp.bfloat16)
+    last = jnp.asarray([ps * pps - 1, 9, -1], jnp.int32)
+    ref = _reference(q, cache, last)
+    for pp, bkv in [(1, 0), (4, 2)]:
+        out = pa.paged_decode_attention(
+            q, cache["k"], cache["v"], cache["tbl"], last,
+            cache.get("k_scale"), cache.get("v_scale"),
+            pp=pp, bkv=bkv, interpret=True)
+        act = np.asarray(last) >= 0
+        np.testing.assert_allclose(np.float32(out)[act],
+                                   np.float32(ref)[act], atol=2e-2)
+        assert (np.float32(out)[~act] == 0).all()
+
+
+def test_decode_window_masking():
+    rng = np.random.default_rng(13)
+    B, KV, G, hd, ps, pps = 2, 2, 2, 16, 4, 8
+    cache = _pool_setup(rng, B, KV, hd, ps, pps)
+    q = jnp.asarray(rng.standard_normal((B, KV * G, hd)), jnp.bfloat16)
+    last = jnp.asarray([ps * pps - 1, 11], jnp.int32)
+    for window in (5, 16):
+        ref = _reference(q, cache, last, window=window)
+        tw = pa.paged_decode_attention_xla(
+            q, cache["k"], cache["v"], cache["tbl"], last,
+            window=window, pp=2)
+        np.testing.assert_array_equal(np.float32(tw), np.float32(ref))
+        kr = pa.paged_decode_attention(
+            q, cache["k"], cache["v"], cache["tbl"], last,
+            window=window, pp=2, interpret=True)
+        np.testing.assert_allclose(np.float32(kr), np.float32(tw), atol=2e-2)
+
+
+def test_ops_dispatch_routes_xla_twin_off_tpu():
+    """interpret=None off-TPU must take the XLA twin (never the slow
+    interpreter) and agree with the explicit twin call bitwise."""
+    rng = np.random.default_rng(17)
+    B, KV, G, hd, ps, pps = 2, 2, 2, 16, 4, 4
+    cache = _pool_setup(rng, B, KV, hd, ps, pps)
+    q = jnp.asarray(rng.standard_normal((B, KV * G, hd)), jnp.bfloat16)
+    last = jnp.asarray([7, 14], jnp.int32)
+    via_ops = ops.paged_decode_attention(q, cache["k"], cache["v"],
+                                         cache["tbl"], last)
+    blocks = autotune.get_blocks("attn.paged_decode", B, ps * pps,
+                                 KV * G * hd, "bfloat16", group_size=ps)
+    direct = pa.paged_decode_attention_xla(
+        q, cache["k"], cache["v"], cache["tbl"], last,
+        pp=max(1, blocks["bk"] // ps))
+    np.testing.assert_array_equal(np.float32(via_ops), np.float32(direct))
+
+
+# ---------------------------------------------------------- flash prefill --
+def test_flash_prefill_matches_dense_core():
+    rng = np.random.default_rng(19)
+    B, KV, G, hd, S = 2, 2, 2, 16, 24
+    H = KV * G
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.bfloat16)
+    pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S)).copy()
+    pos[1, :5] = -1                                # left-pad row
+    pos = jnp.asarray(pos)
+    for window in (0, 7):
+        ref = attention_core(q, k, v, q_positions=pos, k_positions=pos,
+                             window=window, impl="full", chunk_q=64)
+        tw = pa.flash_prefill_xla(q, k, v, pos, pos, window=window, bk=8)
+        kr = pa.flash_prefill(q, k, v, pos, pos, window=window,
+                              bq=8, bk=8, bkv=1, interpret=True)
+        valid = np.asarray(pos) >= 0
+        np.testing.assert_allclose(np.float32(tw)[valid],
+                                   np.float32(ref)[valid], atol=2e-2)
+        np.testing.assert_allclose(np.float32(kr)[valid],
+                                   np.float32(tw)[valid], atol=2e-2)
+
+
+def test_flash_impl_dispatches_from_attention_core():
+    """attention_core(impl='flash') routes through kernels.ops and agrees
+    with the chunked production path."""
+    rng = np.random.default_rng(23)
+    B, KV, G, hd, S = 2, 2, 2, 16, 16
+    q = jnp.asarray(rng.standard_normal((B, S, KV * G, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ref = attention_core(q, k, v, q_positions=pos, k_positions=pos,
+                         window=0, impl="chunked", chunk_q=8)
+    out = attention_core(q, k, v, q_positions=pos, k_positions=pos,
+                         window=0, impl="flash", chunk_q=8)
+    np.testing.assert_allclose(np.float32(out), np.float32(ref), atol=2e-2)
+
+
+# ------------------------------------------------------------ engine e2e ---
+@pytest.fixture(scope="module")
+def reduced_cfg():
+    return get_config("qwen2-0.5b").reduced()
+
+
+def _engine(cfg, rt, num_pages=32, page_size=8, max_ctx=32, params=None):
+    sv = ServingConfig(layout="paged", max_batch=2, page_size=page_size,
+                       num_pages=num_pages, max_ctx=max_ctx)
+    return InferenceEngine(cfg, rt, sv, params=params, seed=0)
+
+
+def test_engine_fused_vs_gather_bit_identical(reduced_cfg):
+    import dataclasses
+    rt = Runtime(quant_backend="float", cache_dtype="bfloat16", remat="none",
+                 loss_chunk=0)
+    params = build_params(reduced_cfg, rt)
+    trace = poisson_trace(4, 1.0, [8], [6], reduced_cfg.vocab, seed=5)
+    _, fin_f = run_trace(_engine(reduced_cfg, rt, params=params), trace)
+    rt_g = dataclasses.replace(rt, paged_attn="gather")
+    _, fin_g = run_trace(_engine(reduced_cfg, rt_g, params=params), trace)
+    assert [r.tokens for r in fin_f] == [r.tokens for r in fin_g]
+
+
+def test_engine_fused_preempt_resume_matches_gather(reduced_cfg):
+    """A pool small enough to force preemption: the fused engine's
+    recompute-resume trace must produce exactly the gather engine's
+    tokens (and an unconstrained fused run's)."""
+    import dataclasses
+    rt = Runtime(quant_backend="float", cache_dtype="bfloat16", remat="none",
+                 loss_chunk=0)
+    params = build_params(reduced_cfg, rt)
+    trace = poisson_trace(4, 2.0, [8], [8], reduced_cfg.vocab, seed=9)
+    eng = _engine(reduced_cfg, rt, num_pages=6, page_size=4, max_ctx=16,
+                  params=params)
+    stats, fin = run_trace(eng, trace)
+    assert stats["requests_preempted"] >= 1
+    assert stats["paged_attn"] == "fused"
+    rt_g = dataclasses.replace(rt, paged_attn="gather")
+    _, fin_g = run_trace(
+        _engine(reduced_cfg, rt_g, num_pages=6, page_size=4, max_ctx=16,
+                params=params), trace)
+    _, fin_big = run_trace(
+        _engine(reduced_cfg, rt, num_pages=32, page_size=4, max_ctx=16,
+                params=params), trace)
+    assert [r.tokens for r in fin] == [r.tokens for r in fin_g]
+    assert [r.tokens for r in fin] == [r.tokens for r in fin_big]
+
+
+def test_engine_profile_reports_attn_split(reduced_cfg):
+    rt = Runtime(quant_backend="float", cache_dtype="bfloat16", remat="none",
+                 loss_chunk=0)
+    eng = _engine(reduced_cfg, rt)
+    trace = poisson_trace(2, 1.0, [8], [4], reduced_cfg.vocab, seed=1)
+    run_trace(eng, trace)
+    prof = eng.profile(reps=1)
+    stats = eng.stats()
+    assert stats["profile"] is prof
+    assert prof["attn_us"] > 0 and prof["decode_step_us"] > 0
+    assert prof["gemm_other_us"] == pytest.approx(
+        max(prof["decode_step_us"] - prof["attn_us"], 0.0), abs=0.2)
+
+
+# --------------------------------------------------------------- autotune --
+def test_attn_autotune_tags():
+    """attn.* ops get attention-shaped defaults, constraint-clean
+    candidates, and cached entries round-trip through get_blocks."""
+    b = autotune.get_blocks("attn.paged_decode", 4, 256, 1024, "bfloat16",
+                            group_size=16)
+    assert b["bk"] % 16 == 0 and b["bk"] <= 256
+    cands = autotune.attn_candidate_blocks("attn.paged_decode", 4, 256, 1024,
+                                           group_size=16)
+    assert cands and all(c["bk"] % 16 == 0 for c in cands)
+    b = autotune.get_blocks("attn.prefill", 64, 64, 1024, "bfloat16")
+    assert b["bm"] <= 64 and b["bk"] <= 64
+
+    autotune.reset()
+    calls = []
+
+    def make_call(blocks):
+        calls.append(blocks)
+        return lambda: None
+
+    best, _ = autotune.tune(
+        "attn.paged_decode", make_call, 4, 256, 1024, "bfloat16",
+        group_size=16, timer=lambda fn: 1.0, save=False)
+    assert best in calls
+    hit = autotune.get_blocks("attn.paged_decode", 4, 256, 1024, "bfloat16",
+                              group_size=16)
+    assert hit == best
+    autotune.reset()
