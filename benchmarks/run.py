@@ -404,9 +404,12 @@ def bench_gemm_backends():
 
 def bench_serving():
     """Continuous-batching engine throughput, paged vs contiguous KV, on a
-    shared Poisson trace (reduced qwen2; see EXPERIMENTS.md §Serving)."""
+    shared Poisson trace, plus the prefix-cache row: the shared-system-
+    prompt scenario served cold vs cached (reduced qwen2; see
+    EXPERIMENTS.md §Serving / §Prefix caching)."""
     from repro.configs import Runtime, ServingConfig, get_config
-    from repro.serving.api import poisson_trace, run_trace
+    from repro.serving.api import poisson_trace, run_trace, \
+        shared_prefix_trace
     from repro.serving.engine import InferenceEngine, build_params
 
     cfg = get_config("qwen2-0.5b").reduced()
@@ -426,6 +429,23 @@ def bench_serving():
              f"p50_s={stats['latency_p50_s']:.3f};"
              f"p95_s={stats['latency_p95_s']:.3f};"
              f"preempt={stats['requests_preempted']}")
+
+    sp_trace = shared_prefix_trace(8, 0.5, 32, [8, 16], [8, 16], cfg.vocab,
+                                   seed=0)
+    for name, cached in (("prefix_cache", True), ("prefix_cold", False)):
+        sv = ServingConfig(layout="paged", max_batch=4, page_size=16,
+                           num_pages=48, max_ctx=128, prefix_cache=cached)
+        engine = InferenceEngine(cfg, rt, sv, params=params)
+        # warm the full-prompt buckets (40/48 -> 64) AND the tail buckets a
+        # 32-token hit leaves behind (8/16), so neither run absorbs compiles
+        engine.warmup([8, 16, 40, 48])
+        stats, _ = run_trace(engine, sp_trace)
+        us = stats["wall_s"] * 1e6 / max(stats["steps"], 1)
+        emit(f"serving.{name}", us,
+             f"tok_per_s={stats['decode_tok_per_s']:.2f};"
+             f"hit_rate={stats['prefix_hit_rate']:.3f};"
+             f"prefill_saved={stats['tokens_prefilled_saved']};"
+             f"prefill={stats['prefill_tokens']}")
 
 
 def bench_sensitivity():

@@ -175,6 +175,11 @@ class Runtime:
     compute_dtype: str = "bfloat16"
     aligned_decode: bool = True     # batch rows share positions: DUS cache
                                     # writes instead of scatter (§Perf)
+    # Paged prefill attends over the gathered page pool instead of the
+    # in-flight K/V: the tail-prefill step for prefix-cache hits (the query
+    # covers only the uncached suffix; cached prefix K/V live in shared
+    # pages).  Static knob — the engine jits one prefill per value.
+    prefill_over_cache: bool = False
 
     def quant_cfg(self, arch: ArchConfig, site: str = "") -> QuantConfig:
         """Per-site QuantConfig under the active plan.  `site` is the
@@ -197,6 +202,13 @@ class ServingConfig:
     `max_ctx`-long cache row per batch slot (static-slot baseline).  Bucketing
     bounds the number of distinct jit signatures: decode batches are padded
     up to the nearest bucket, prompts to the nearest power-of-two length.
+
+    `prefix_cache` (paged layout only) content-addresses full KV pages by
+    chained prefix hash: admission reuses cached pages for the longest
+    page-aligned prompt/resume prefix (refcount-shared, never rewritten) and
+    prefill computes only the uncached tail.  `prefix_lru` keeps freed
+    registered pages in the index (refcount 0, evicted LRU only when the
+    free list runs dry); off, released pages forget their contents at once.
     """
 
     layout: str = "paged"           # paged | contiguous
@@ -205,6 +217,8 @@ class ServingConfig:
     num_pages: int = 128            # shared pool size (paged layout)
     max_ctx: int = 256              # max prompt+generation length per request
     decode_buckets: Tuple[int, ...] = ()   # () => powers of two up to max_batch
+    prefix_cache: bool = True       # shared-prefix KV page reuse (paged only)
+    prefix_lru: bool = True         # keep refcount-0 pages cached until dry
 
     def __post_init__(self):
         assert self.layout in ("paged", "contiguous"), self.layout

@@ -185,10 +185,13 @@ def paged_decode_attention(
     def page_spec(u, heads):
         # the scalar-prefetched block table turns the logical page into a
         # physical pool index right in the index_map: the pipeline DMAs the
-        # page from wherever it lives, no gather ever materializes
+        # page from wherever it lives, no gather ever materializes.  Dead
+        # table slots carry the out-of-bounds sentinel (== P); clamp so the
+        # DMA stays in bounds — the kernel masks those positions anyway.
         def index(b, h, j, tbl_ref, lp_ref):
             logical = jnp.minimum(j * pp + u, pps - 1)
-            return (tbl_ref[b, logical], 0, h if heads else 0, 0)
+            return (jnp.minimum(tbl_ref[b, logical], P - 1), 0,
+                    h if heads else 0, 0)
         return index
 
     kv_block = k_pool.shape[-1]                    # hd, or hd//2 packed
@@ -259,9 +262,12 @@ def paged_decode_attention_xla(
     nj = -(-pps // pp)
     tokens = pp * ps
     S = nj * tokens
-    # pad the table so each block slices pp whole columns (the padded
-    # columns' positions are > last_pos and mask away)
-    tbl_p = jnp.pad(tbl.astype(jnp.int32), ((0, 0), (0, nj * pp - pps)))
+    # pad the table so each block slices pp whole columns; padded columns
+    # carry the out-of-bounds sentinel like dead slots do — their positions
+    # are past last_pos, so their (clamped-gather) data masks away through
+    # zero probs in the PV loop
+    tbl_p = jnp.pad(tbl.astype(jnp.int32), ((0, 0), (0, nj * pp - pps)),
+                    constant_values=P)
     last_pos = last_pos.astype(jnp.int32)
     q4 = q.reshape(B, KV, G, hd)
     steps = jnp.clip((jnp.max(last_pos) + tokens) // tokens, 1, nj)
@@ -298,6 +304,12 @@ def paged_decode_attention_xla(
         if quant:
             vb = _dequant_slab(vb, v_scale[cols], hd)
         vb = vb.reshape(B, tokens, KV, hd)
+        # dead table slots hold the out-of-bounds sentinel (== P); the
+        # gather clamps them to the last physical page, whose masked
+        # positions contribute exactly 0 via zero probs.  (Finite-garbage
+        # safe, like the pre-sentinel code; the NaN-proof zero-fill lives
+        # in paged_read — zeroing V per block here costs 10-25% of the
+        # decode step for a hazard only a NaN-poisoned pool can hit.)
         p = jax.lax.dynamic_slice_in_dim(probs, j * tokens, tokens, 3)
         pv = jnp.einsum("bkgt,btkh->bkgh", p, vb,
                         preferred_element_type=jnp.float32)

@@ -6,7 +6,11 @@ p50/p95 per-request latency.  `--layout compare` runs the same trace through
 three attention paths — contiguous KV, paged KV with the gather
 (`paged_read`-then-attend) baseline, and paged KV with the fused
 paged-attention kernel — and verifies the generated tokens are
-bit-identical across all three.
+bit-identical across all three; with the prefix cache on it adds a fourth
+`paged_nocache` cold twin, proving cache-hit runs token-identical to cold
+runs.  `--scenario shared_prefix` swaps the traffic for a shared-system-
+prompt fleet (the prefix cache's target workload) and the report carries
+`prefix_hit_rate` / `tokens_prefilled_saved`.
 
 Mixed precision: `--quant-plan <name|path|inline>` serves under any
 site-addressable QuantPlan (core.quant_plan).  `--quantized-ckpt` proves the
@@ -38,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import Runtime, ServingConfig, get_config
-from repro.serving.api import poisson_trace, run_trace
+from repro.serving.api import poisson_trace, run_trace, shared_prefix_trace
 from repro.serving.engine import InferenceEngine, build_params
 
 
@@ -102,7 +106,8 @@ def _quantized_ckpt_report(cfg, rt, ckpt_dir, seed):
 
 def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
           page_size=16, num_pages=48, max_ctx=128, requests=8, rate=0.5,
-          prompt_lens=(8, 16, 32), gen_lens=(8, 16),
+          prompt_lens=(8, 16, 32), gen_lens=(8, 16), scenario="poisson",
+          sys_len=32, prefix_cache=True,
           quant_backend="w4a4_packed", quant_plan=None, cache_dtype="bfloat16",
           quantized_ckpt=False, ckpt_dir=None, sweep=False, seed=0):
     cfg = get_config(arch)
@@ -116,16 +121,33 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
                  quant_backend=None if quant_plan else quant_backend,
                  quant_plan=quant_plan, cache_dtype=cache_dtype,
                  remat="none")
-    trace = poisson_trace(requests, rate, prompt_lens, gen_lens,
-                          cfg.vocab, seed=seed)
+    if scenario == "shared_prefix":
+        trace = shared_prefix_trace(requests, rate, sys_len, prompt_lens,
+                                    gen_lens, cfg.vocab, seed=seed)
+        # warm both the cold full prompts (sys + user suffix) and the tail
+        # buckets a prefix hit leaves behind, so no engine absorbs a
+        # mid-window jit compile
+        warm_lens = tuple(prompt_lens) + tuple(sys_len + p
+                                               for p in prompt_lens)
+    else:
+        trace = poisson_trace(requests, rate, prompt_lens, gen_lens,
+                              cfg.vocab, seed=seed)
+        warm_lens = tuple(prompt_lens)
     # "paged" serves through the fused paged-attention kernel;
-    # "paged_gather" is the same layout through the paged_read baseline
+    # "paged_gather" is the same layout through the paged_read baseline.
+    # In compare mode with the prefix cache on, "paged_nocache" adds the
+    # cold twin: the same fused path with prefix_cache=off, which must be
+    # token-identical to the cache-hit runs (contiguous is a second cold
+    # reference — it never prefix-caches).
     layouts = (["paged", "paged_gather", "contiguous"]
+               + (["paged_nocache"] if prefix_cache else [])
                if layout == "compare" else [layout])
 
     report = {"arch": arch, "reduced": reduced,
               "quant": quant_plan or quant_backend, "cache_dtype": cache_dtype,
-              "requests": requests, "rate_per_step": rate}
+              "requests": requests, "rate_per_step": rate,
+              "scenario": scenario, "prefix_cache": bool(prefix_cache),
+              **({"sys_len": sys_len} if scenario == "shared_prefix" else {})}
     params_ref = None
     if quantized_ckpt:
         # serve from a quantized checkpoint; keep the plan-on-masters twin
@@ -144,14 +166,16 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
 
     tokens_by_layout = {}
     for lay in layouts:
-        kv_layout = "paged" if lay == "paged_gather" else lay
+        kv_layout = "contiguous" if lay == "contiguous" else "paged"
         rt_lay = (dataclasses.replace(rt, paged_attn="gather")
                   if lay == "paged_gather" else rt)
         sv = ServingConfig(layout=kv_layout, max_batch=max_batch,
                            page_size=page_size, num_pages=num_pages,
-                           max_ctx=max_ctx)
+                           max_ctx=max_ctx,
+                           prefix_cache=(prefix_cache
+                                         and lay != "paged_nocache"))
         engine = InferenceEngine(cfg, rt_lay, sv, params=params)
-        engine.warmup(prompt_lens)     # compiles excluded from the stats
+        engine.warmup(warm_lens)       # compiles excluded from the stats
         stats, finished = run_trace(engine, trace)
         stats["profile"] = engine.profile()   # attn vs GEMM attribution
         report[lay] = stats
@@ -164,7 +188,7 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
                            page_size=page_size, num_pages=num_pages,
                            max_ctx=max_ctx)
         engine_ref = InferenceEngine(cfg, rt, sv, params=params_ref)
-        engine_ref.warmup(prompt_lens)
+        engine_ref.warmup(warm_lens)
         _, finished_ref = run_trace(engine_ref, trace)
         report["quantized_ckpt"]["tokens_match"] = bool(
             tokens_by_layout[layouts[0]] == [r.tokens for r in finished_ref])
@@ -179,14 +203,18 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
         same = all(tokens_by_layout[lay] == ref_tokens for lay in layouts[1:])
         report["bit_identical"] = bool(same)
         if not same:
-            # only the paged layouts preempt; with a lossy KV dtype the
-            # recompute-resume re-attends in full precision, so argmax can
-            # legitimately diverge (EXPERIMENTS.md §Serving)
-            if (cache_dtype in ("int8", "int4")
-                    and report["paged"]["requests_preempted"] > 0):
-                report["note"] = ("paged diverged after preemption with a "
-                                  "lossy KV-cache dtype: recomputed prefixes "
-                                  "attend in full precision — expected")
+            # only the paged layouts preempt, and only they take prefix-
+            # cache hits; with a lossy KV dtype recompute-resume (and a hit
+            # prefill) attends dequantized state where the cold path attends
+            # full precision, so argmax can legitimately diverge
+            # (EXPERIMENTS.md §Serving / §Prefix caching)
+            lossy_paths = (report["paged"]["requests_preempted"] > 0
+                           or report["paged"]["tokens_prefilled_saved"] > 0)
+            if cache_dtype in ("int8", "int4") and lossy_paths:
+                report["note"] = ("paged diverged after preemption or a "
+                                  "prefix-cache hit with a lossy KV-cache "
+                                  "dtype: recomputed/cold prefixes attend in "
+                                  "full precision — expected")
             else:
                 diverged = [lay for lay in layouts[1:]
                             if tokens_by_layout[lay] != ref_tokens]
@@ -198,6 +226,8 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
     report["tokens_per_s"] = primary["decode_tok_per_s"]
     report["latency_p50_s"] = primary["latency_p50_s"]
     report["latency_p95_s"] = primary["latency_p95_s"]
+    report["prefix_hit_rate"] = primary.get("prefix_hit_rate", 0.0)
+    report["tokens_prefilled_saved"] = primary.get("tokens_prefilled_saved", 0)
     return report
 
 
@@ -222,6 +252,17 @@ def main():
                     help="Poisson arrival rate in requests per decode step")
     ap.add_argument("--prompt-lens", default="8,16,32")
     ap.add_argument("--gen-lens", default="8,16")
+    ap.add_argument("--scenario", default="poisson",
+                    choices=["poisson", "shared_prefix"],
+                    help="shared_prefix: every prompt = one shared system "
+                         "prefix (--sys-len) + a unique user suffix drawn "
+                         "from --prompt-lens")
+    ap.add_argument("--sys-len", type=int, default=32,
+                    help="shared system-prompt length (shared_prefix)")
+    ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
+                    help="shared-prefix KV page reuse (paged layout); "
+                         "compare mode adds a paged_nocache cold twin "
+                         "when on")
     ap.add_argument("--quant", default="w4a4_packed",
                     help="uniform backend (deprecated in favor of "
                          "--quant-plan; kept working via a uniform plan)")
@@ -249,6 +290,8 @@ def main():
         requests=args.requests, rate=args.rate,
         prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
         gen_lens=tuple(int(x) for x in args.gen_lens.split(",")),
+        scenario=args.scenario, sys_len=args.sys_len,
+        prefix_cache=args.prefix_cache == "on",
         quant_backend=args.quant, quant_plan=args.quant_plan,
         cache_dtype=args.cache_dtype,
         quantized_ckpt=args.quantized_ckpt, ckpt_dir=args.ckpt_dir,

@@ -66,9 +66,10 @@ def make_decode_step(cfg: ArchConfig, rt: Runtime):
 
 
 def make_serving_steps(cfg: ArchConfig, rt: Runtime, paged: bool = False):
-    """(jit'd prefill, jit'd decode) for the continuous-batching engine.
+    """(jit'd prefill, jit'd tail-prefill-or-None, jit'd decode) for the
+    continuous-batching engine.
 
-    Both donate the cache argument (the KV pool is the dominant buffer and
+    All donate the cache argument (the KV pool is the dominant buffer and
     is threaded through every step) and run greedy argmax *inside* the jit,
     so the only device->host traffic per step is one int32 per row.  jit
     re-specializes per input shape, so the engine's batch/prompt bucketing
@@ -80,7 +81,12 @@ def make_serving_steps(cfg: ArchConfig, rt: Runtime, paged: bool = False):
     and the step's slot ids: the per-row tables are gathered and bound to
     every layer inside the jit, so the host never assembles a block table
     per step — rows move host->device only when a request is admitted or
-    its allocation grows.
+    its allocation grows.  The tail-prefill step is the chunked-prefill
+    seam for prefix-cache hits: it runs the same prefill with
+    ``rt.prefill_over_cache`` set, so the (suffix-only) queries attend over
+    the gathered page pool — cached prefix pages included — instead of just
+    the in-flight K/V.  For the contiguous layout it is None (no pages to
+    share).
     """
     vocab = cfg.vocab
 
@@ -88,31 +94,45 @@ def make_serving_steps(cfg: ArchConfig, rt: Runtime, paged: bool = False):
         return jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
 
     if paged:
+        import dataclasses
+
         from repro.serving.kv_pages import with_block_tables
 
-        def prefill_step(params, tokens, caches, positions, tbl_all, slots):
-            caches = with_block_tables(caches, jnp.take(tbl_all, slots, 0))
-            logits, caches = prefill_fn(params, tokens, cfg, rt, caches,
-                                        positions)
-            return _greedy(logits), caches
+        rt_tail = dataclasses.replace(rt, prefill_over_cache=True)
+
+        def make_prefill(rt_used):
+            def prefill_step(params, tokens, caches, positions, tbl_all,
+                             slots):
+                caches = with_block_tables(caches,
+                                           jnp.take(tbl_all, slots, 0))
+                logits, caches = prefill_fn(params, tokens, cfg, rt_used,
+                                            caches, positions)
+                return _greedy(logits), caches
+
+            return prefill_step
 
         def dec_step(params, token, caches, positions, tbl_all, slots):
             caches = with_block_tables(caches, jnp.take(tbl_all, slots, 0))
             logits, caches = decode_step(params, token, cfg, rt, caches,
                                          positions)
             return _greedy(logits), caches
-    else:
-        def prefill_step(params, tokens, caches, positions):
-            logits, caches = prefill_fn(params, tokens, cfg, rt, caches,
-                                        positions)
-            return _greedy(logits), caches
 
-        def dec_step(params, token, caches, positions):
-            logits, caches = decode_step(params, token, cfg, rt, caches,
-                                         positions)
-            return _greedy(logits), caches
+        return (jax.jit(make_prefill(rt), donate_argnums=(2,)),
+                jax.jit(make_prefill(rt_tail), donate_argnums=(2,)),
+                jax.jit(dec_step, donate_argnums=(2,)))
+
+    def prefill_step(params, tokens, caches, positions):
+        logits, caches = prefill_fn(params, tokens, cfg, rt, caches,
+                                    positions)
+        return _greedy(logits), caches
+
+    def dec_step(params, token, caches, positions):
+        logits, caches = decode_step(params, token, cfg, rt, caches,
+                                     positions)
+        return _greedy(logits), caches
 
     return (jax.jit(prefill_step, donate_argnums=(2,)),
+            None,
             jax.jit(dec_step, donate_argnums=(2,)))
 
 

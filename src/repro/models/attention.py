@@ -333,6 +333,21 @@ def apply_attention(
                     window=cfg.local_window, impl="full",
                     chunk_q=rt.attn_chunk_q,
                 )
+        elif rt.prefill_over_cache:
+            # tail prefill (prefix-cache hit): the query covers only the
+            # uncached suffix; its keys join the prefix K/V already living
+            # in shared pages, so write the suffix first and attend over
+            # the gathered pool — the same dense layout the decode gather
+            # baseline reconstructs, with kpos masking the empty slots.
+            new_cache = paged_write(cache, k, v, tpos) if update_cache \
+                else cache
+            kf, vf, kpos = paged_read(new_cache, tpos[:, -1])
+            out = attention_core(
+                q, kf, vf,
+                q_positions=tpos, k_positions=kpos,
+                window=cfg.local_window, impl=rt.attn_impl,
+                chunk_q=rt.attn_chunk_q, tag=join_site(site, "attn.prefill"),
+            )
         else:
             # prefill: the prompt is the whole context — attend in-flight,
             # write it into the pages for later decode steps

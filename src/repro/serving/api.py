@@ -69,6 +69,38 @@ def poisson_trace(
     return out
 
 
+def shared_prefix_trace(
+    n_requests: int,
+    rate_per_step: float,
+    sys_len: int,
+    user_lens: Sequence[int],
+    gen_lens: Sequence[int],
+    vocab: int,
+    seed: int = 0,
+    n_system_prompts: int = 1,
+) -> List[TraceItem]:
+    """Shared-system-prompt traffic: every request's prompt is one of
+    `n_system_prompts` fixed system prefixes (`sys_len` tokens) followed by
+    a unique user suffix — the workload where a prefix cache amortizes the
+    system prompt's KV across the fleet.  Arrivals follow the same
+    open-loop Poisson process as `poisson_trace`."""
+    rng = np.random.default_rng(seed)
+    systems = [rng.integers(0, vocab, size=sys_len, dtype=np.int32)
+               for _ in range(max(1, n_system_prompts))]
+    t, out = 0.0, []
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / max(rate_per_step, 1e-9))
+        sys_p = systems[int(rng.integers(0, len(systems)))]
+        user = rng.integers(0, vocab, size=int(rng.choice(list(user_lens))),
+                            dtype=np.int32)
+        out.append(TraceItem(
+            arrival_step=int(t),
+            prompt=np.concatenate([sys_p, user]),
+            max_new=int(rng.choice(list(gen_lens))),
+        ))
+    return out
+
+
 def run_trace(engine: InferenceEngine, trace: List[TraceItem],
               max_steps: int = 100_000) -> Tuple[Dict, List[Request]]:
     """Drive a trace to completion: submit each request at its arrival step,

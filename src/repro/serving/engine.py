@@ -94,11 +94,20 @@ class InferenceEngine:
             self.kv = PagedKVCacheManager(sv)
             # batch=0 template: pool leaves are batch-independent; block
             # tables are rebound per call (inside the jit'd steps) from the
-            # device-resident [max_batch, pages_per_seq] table pool
+            # device-resident [max_batch, pages_per_seq] table pool.  Rows
+            # start at the out-of-bounds sentinel (== num_pages): writes
+            # through an unassigned slot drop, reads gather zeros — never
+            # physical page 0.
             self.caches = init_paged_caches(cfg, rt, 0, sv)
-            self._tbl = jnp.zeros((sv.max_batch, sv.pages_per_seq), jnp.int32)
+            self._tbl = jnp.full((sv.max_batch, sv.pages_per_seq),
+                                 sv.num_pages, jnp.int32)
             self._tbl0 = np.zeros((0, sv.pages_per_seq), np.int32)
-            self._tbl_ver: Dict[int, int] = {}   # rid -> uploaded page count
+            # rid -> (slot, uploaded page ids): a row re-uploads only when
+            # the allocation actually changed.  Keyed on the page-id tuple,
+            # not the count — a resumed request re-acquiring refcount-held
+            # pages may come back with the same *number* of pages but must
+            # still re-upload if the ids (or its slot) differ.
+            self._tbl_ver: Dict[int, tuple] = {}
         else:
             self.kv = ContinuousKVCache(sv)
             self.caches = init_caches(cfg, rt, batch=sv.max_batch,
@@ -109,7 +118,7 @@ class InferenceEngine:
         # blocks through kernels.autotune at trace time, so loading the
         # cache before the first compile is all the wiring needed
         autotune.ensure_loaded()
-        self._prefill, self._decode = make_serving_steps(
+        self._prefill, self._prefill_tail, self._decode = make_serving_steps(
             cfg, rt, paged=sv.layout == "paged")
 
         self._next_rid = 0
@@ -118,7 +127,8 @@ class InferenceEngine:
         # stats
         self.n_steps = 0
         self.n_decode_tokens = 0
-        self.n_prefill_tokens = 0
+        self.n_prefill_tokens = 0        # tokens actually pushed through prefill
+        self.n_prefix_hit_tokens = 0     # prompt/resume tokens served from cache
         self.t_start = None
         self._profile: Optional[Dict] = None
 
@@ -156,6 +166,14 @@ class InferenceEngine:
                     self.params, tokens, self.caches, positions,
                     self._tbl, jnp.zeros((1,), jnp.int32))
                 self._strip_tables()
+                if self.sv.prefix_cache:
+                    # prefix hits run the tail-prefill step over the same
+                    # bucket set (a tail can also land in a smaller bucket
+                    # mid-run; that compile is attributed to the run)
+                    _, self.caches = self._prefill_tail(
+                        self.params, tokens, self.caches, positions,
+                        self._tbl, jnp.zeros((1,), jnp.int32))
+                    self._strip_tables()
             else:
                 row = init_caches(self.cfg, self.rt, batch=1,
                                   seq=self.sv.max_ctx)
@@ -218,32 +236,47 @@ class InferenceEngine:
         last upload (admission, page growth).  This is the only host->device
         block-table traffic — steady-state decode uploads nothing."""
         for req in batch:
-            n = len(self.kv.pages.get(req.rid, ()))
-            if self._tbl_ver.get(req.rid) != n:
+            ver = (req.slot, tuple(self.kv.pages.get(req.rid, ())))
+            if self._tbl_ver.get(req.rid) != ver:
                 self._tbl = self._tbl.at[req.slot].set(
                     jnp.asarray(self.kv.table_row(req.rid)))
-                self._tbl_ver[req.rid] = n
-        # drop versions of finished/preempted requests: a preempted rid that
-        # re-admits with the same page *count* must still re-upload (its
-        # page ids changed), and dead entries must not accumulate
+                self._tbl_ver[req.rid] = ver
+        # drop versions of finished/preempted requests so dead entries don't
+        # accumulate.  Correctness doesn't ride on this prune: versions key
+        # on (slot, page ids), so a resumed rid re-admitting with the very
+        # same refcount-held pages into the same slot genuinely needs no
+        # re-upload, and any change in slot or ids forces one.
         running = self.scheduler.running
         for rid in [r for r in self._tbl_ver if r not in running]:
             del self._tbl_ver[rid]
 
     def _prefill_request(self, req: Request) -> None:
-        """Prefill a (re-)admitted request's full prefix (batch of one,
-        prompt left-padded to a power-of-two bucket) and emit its first
-        token from the prefill logits."""
+        """Prefill a (re-)admitted request's uncached prefix tail (batch of
+        one, left-padded to a power-of-two bucket) and emit its first token
+        from the prefill logits.
+
+        The scheduler's admission set ``req.n_cached`` to the prefix-cache
+        hit length (0 without a hit): the cached prefix already lives in
+        shared pages, so only ``prefix[hit:]`` flows through the model —
+        via the tail-prefill step, whose suffix queries attend over the
+        gathered page pool instead of just the in-flight K/V."""
         prefix = req.prefix
         L = len(prefix)
-        Lb = self._prompt_pad(L)
+        hit = req.n_cached                     # page-aligned, < L by design
+        tail = prefix[hit:]
+        n = len(tail)
+        Lb = self._prompt_pad(n)
         tokens = np.zeros((1, Lb), np.int32)
-        tokens[0, Lb - L:] = prefix
-        positions = (np.arange(Lb, dtype=np.int32) - (Lb - L))[None, :]
+        tokens[0, Lb - n:] = tail
+        base = np.arange(Lb, dtype=np.int32) - (Lb - n)
+        # pad rows must stay negative (dropped writes / masked queries) even
+        # after the hit offset shifts the real tail to hit..L-1
+        positions = np.where(base >= 0, base + hit, -1)[None, :]
 
         if self.sv.layout == "paged":
             self._sync_tables([req])
-            tok, self.caches = self._prefill(
+            step = self._prefill_tail if hit else self._prefill
+            tok, self.caches = step(
                 self.params, jnp.asarray(tokens), self.caches,
                 jnp.asarray(positions), self._tbl,
                 jnp.asarray([req.slot], jnp.int32))
@@ -257,7 +290,9 @@ class InferenceEngine:
             self.caches = scatter_rows(self.caches, row, [req.slot])
 
         req.n_cached = L
-        self.n_prefill_tokens += L
+        self.n_prefill_tokens += n
+        self.n_prefix_hit_tokens += hit
+        self.kv.register_upto(req.rid, prefix, L)   # index newly-full pages
         req.tokens.append(int(tok[0]))
         if req.t_first is None:
             req.t_first = self.clock()
@@ -293,9 +328,14 @@ class InferenceEngine:
             self.caches = scatter_rows(
                 self.caches, gather_rows(sub, np.arange(n)), rows[:n])
         nxt = np.asarray(nxt)
+        ps = self.sv.page_size
         for i, req in enumerate(batch):
             req.n_cached += 1
             req.tokens.append(int(nxt[i]))
+            if self.sv.layout == "paged" and req.n_cached % ps == 0:
+                # a generated-token page just filled: index it so preempted
+                # or follow-up requests sharing this prefix can hit it
+                self.kv.register_upto(req.rid, req.prefix, req.n_cached)
         self.n_decode_tokens += n
 
     # ----------------------------------------------------------- profile --
@@ -413,12 +453,23 @@ class InferenceEngine:
         ttft = [r.t_first - r.t_visible for r in done if r.t_first]
         wall = (self.clock() - self.t_start) if self.t_start else 0.0
         pct = (lambda xs, q: float(np.percentile(xs, q)) if xs else None)
+        demand = self.n_prefill_tokens + self.n_prefix_hit_tokens
         return {
             "layout": self.sv.layout,
             "requests_finished": len(done),
             "requests_preempted": self.scheduler.n_preemptions,
             "steps": self.n_steps,
             "prefill_tokens": self.n_prefill_tokens,
+            "tokens_prefilled_saved": self.n_prefix_hit_tokens,
+            "prefix_hit_rate": (self.n_prefix_hit_tokens / demand
+                                if demand else 0.0),
+            "prefix_cache": {
+                "enabled": (self.sv.layout == "paged"
+                            and self.sv.prefix_cache),
+                "lookups": self.kv.n_lookups,
+                "hit_tokens": self.kv.n_hit_tokens,
+                "evictions": self.kv.n_evictions,
+            },
             "decode_tokens": self.n_decode_tokens,
             "wall_s": wall,
             "decode_tok_per_s": self.n_decode_tokens / wall if wall else None,

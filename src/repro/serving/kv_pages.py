@@ -15,16 +15,52 @@ j % page_size``; a gather along that index vector reconstructs exactly the
 [B, max_ctx, KV, hd] layout of the contiguous cache, which is what makes
 paged and contiguous decode bit-identical.
 
-Host side, ``PagedKVCacheManager`` owns the free list and per-request page
+Host side, ``PagedKVCacheManager`` owns the page pool and per-request page
 lists; ``ContinuousKVCache`` wraps the static-slot layout behind the same
 manager interface (its "pages" are whole cache rows, so `ensure` only checks
 the context bound).
+
+Prefix caching (``ServingConfig.prefix_cache``) turns the manager into a
+refcounted, content-addressed pool:
+
+  * **Identity.**  Every *full* page is identified by a chained block hash
+    (vLLM-style): ``h_i = H(h_{i-1}, tokens[i*ps:(i+1)*ps])``, so a page's
+    hash pins the entire token prefix behind it, not just its own tokens.
+    Pages are registered in the index the moment they fill (end of prefill
+    for prompt pages, decode-step page-boundary crossings for generated
+    ones).
+  * **Sharing.**  Admission matches the longest indexed page-aligned prefix
+    and hands the request those physical pages with ``refcount += 1``; only
+    the uncached tail is prefilled.  The hit is capped *below* the full
+    prefix so at least one token is always recomputed (its logits seed the
+    next token).
+  * **Copy-on-write discipline.**  Shared pages are immutable: only full
+    pages are ever indexed, hits are page-aligned, and the tail prefill
+    starts at the page boundary past the hit — so a writer's positions can
+    never land in a page with ``refcount > 1``.  The "partially-filled last
+    page" case (a hit that would cover the whole prompt) is resolved by
+    capping the hit one page down and re-prefilling that page's tokens into
+    a *fresh private page* — copy-on-write implemented as recompute-on-
+    write-into-private, which costs at most ``page_size - 1`` tokens and
+    needs no device-side page copy.
+  * **Eviction.**  ``release`` drops a page's refcount; at zero a registered
+    page parks in an LRU of warm pages (still indexed, still hittable —
+    this is what makes preempt→resume and repeated system prompts near-
+    free) while unregistered pages return to the blank free list.  New
+    allocations prefer blank pages and evict the LRU-oldest warm page only
+    when the blank list runs dry (``prefix_lru=False`` forgets content at
+    release instead).
+
+The device side needs no changes for sharing: block tables simply point
+several requests at the same physical pages, and ``paged_write`` routes the
+unused table slots' sentinel (page index == num_pages) out of bounds where
+writes drop and reads gather zeros.
 """
 
 from __future__ import annotations
 
-from collections import deque
-from typing import Dict, List, Optional
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,7 +148,13 @@ def paged_read(cache: Dict, last_pos):
     """Gather each row's pages back into the contiguous [B, max_ctx, KV, hd]
     layout.  last_pos [B] is the newest valid absolute position per row (-1 =
     inactive row); returns (k, v, kpos) with kpos[b, j] = j for valid slots,
-    -1 otherwise — the same masking contract as the contiguous cache."""
+    -1 otherwise — the same masking contract as the contiguous cache.
+
+    Table slots holding the out-of-bounds sentinel (page index == num_pages,
+    the unallocated-slot marker `table_row` writes) gather exact zeros via
+    fill-mode indexing — stale pool data behind a dead table entry can never
+    leak into the dense layout (attention masks those slots, but a NaN in a
+    recycled page would still poison `0 * NaN` in the PV contraction)."""
     P, ps = cache["k"].shape[:2]
     tbl = cache["tbl"]
     B, pps = tbl.shape
@@ -121,7 +163,8 @@ def paged_read(cache: Dict, last_pos):
            + jnp.arange(ps, dtype=jnp.int32)[None, None, :]).reshape(B, max_ctx)
 
     def gather(pool):
-        return pool.reshape(P * ps, *pool.shape[2:])[idx]
+        flat = pool.reshape(P * ps, *pool.shape[2:])
+        return flat.at[idx].get(mode="fill", fill_value=0)
 
     if "k_scale" in cache:
         k = dequantize_kv(gather(cache["k"]), gather(cache["k_scale"]))
@@ -178,58 +221,207 @@ def scatter_rows(caches: Dict, sub: Dict, rows) -> Dict:
 
 
 # --------------------------------------------------------- host-side managers --
+_HASH_SEED = 0x9E3779B97F4A7C15
+
+
+def _chain_hash(prev: int, tokens: np.ndarray) -> int:
+    """Chained block hash: pins the whole prefix behind a page, not just
+    the page's own tokens."""
+    return hash((prev, np.asarray(tokens, np.int32).tobytes()))
+
+
 class PagedKVCacheManager:
-    """Free-list page allocator + per-request block tables (host side).
+    """Refcounted, content-addressed page pool + per-request block tables.
 
     Page ids index the device pool directly.  `ensure(rid, n)` grows rid's
     page list to cover `n` cached tokens and reports whether the pool could
-    satisfy it — the scheduler turns a False into a preemption.  Freed pages
-    go to the back of the free list so reuse-after-free bugs surface fast.
+    satisfy it — the scheduler turns a False into a preemption.  With
+    ``sv.prefix_cache`` on, `admit_request` shares already-filled pages
+    (see the module docstring for the sharing/COW/eviction design); every
+    page is always in exactly one of three states:
+
+      blank    -- on `self.blank`, contents meaningless, refcount 0
+      warm     -- refcount 0 but still registered in the prefix index
+                  (`self.warm`, LRU order); allocatable after blanks run dry
+      in use   -- refcount >= 1, owned by that many requests
+
+    which is the invariant the allocator property test asserts.
     """
 
     def __init__(self, sv: ServingConfig):
         self.sv = sv
-        self.free: deque = deque(range(sv.num_pages))
+        self.blank: deque = deque(range(sv.num_pages))
+        self.warm: "OrderedDict[int, None]" = OrderedDict()  # refcount-0, indexed
         self.pages: Dict[int, List[int]] = {}
+        self.refcount: Dict[int, int] = {}
+        self.index: Dict[int, int] = {}        # chain hash -> page
+        self.page_hash: Dict[int, int] = {}    # page -> chain hash
+        self._chain: Dict[int, Tuple[int, int]] = {}  # rid -> (pages hashed, h)
         self.high_water = 0
+        # prefix-cache counters (engine stats surface these)
+        self.n_lookups = 0
+        self.n_hit_tokens = 0
+        self.n_evictions = 0
 
     # -- capacity ---------------------------------------------------------
     @property
+    def free(self) -> List[int]:
+        """Allocatable pages, blank first then warm in eviction order (kept
+        as a property for callers/tests that inspect the free pool)."""
+        return list(self.blank) + list(self.warm)
+
+    @property
     def available(self) -> int:
-        return len(self.free)
+        return len(self.blank) + len(self.warm)
 
     @property
     def in_use(self) -> int:
-        return self.sv.num_pages - len(self.free)
+        return self.sv.num_pages - self.available
 
     def pages_for(self, n_tokens: int) -> int:
-        return max(1, -(-n_tokens // self.sv.page_size))
+        return -(-n_tokens // self.sv.page_size)
 
     def fits_alone(self, n_tokens: int) -> bool:
         """Can a request of this total length run with the whole pool?"""
         return (self.pages_for(n_tokens) <= self.sv.num_pages
                 and n_tokens <= self.sv.max_ctx)
 
+    def capacity_desc(self) -> str:
+        return (f"max_ctx={self.sv.max_ctx}, "
+                f"pool={self.sv.num_pages} pages "
+                f"of {self.sv.page_size} tokens")
+
     # -- allocation -------------------------------------------------------
+    def _alloc_page(self) -> Optional[int]:
+        """One blank-or-evicted page with no index entry left behind."""
+        if self.blank:
+            return self.blank.popleft()
+        if self.warm:
+            page, _ = self.warm.popitem(last=False)      # LRU-oldest
+            h = self.page_hash.pop(page)
+            del self.index[h]
+            self.n_evictions += 1
+            return page
+        return None
+
     def ensure(self, rid: int, n_tokens: int) -> bool:
-        """Grow rid's allocation to cover n_tokens cached slots."""
+        """Grow rid's allocation to cover n_tokens cached slots.  New pages
+        are private (refcount 1); shared pages arrive via admit_request."""
         if n_tokens > self.sv.max_ctx:
             return False
         have = self.pages.setdefault(rid, [])
         need = self.pages_for(n_tokens) - len(have)
-        if need > len(self.free):
-            return False
+        if need > self.available:
+            return False                                  # all-or-nothing
         for _ in range(need):
-            have.append(self.free.popleft())
+            page = self._alloc_page()
+            self.refcount[page] = 1
+            have.append(page)
         self.high_water = max(self.high_water, self.in_use)
         return True
 
     def release(self, rid: int) -> None:
+        """Drop rid's hold on its pages.  Registered pages whose refcount
+        hits zero stay warm (indexed, LRU-evictable); unregistered ones
+        go blank immediately, as does everything when prefix_lru is off."""
         for p in self.pages.pop(rid, []):
-            self.free.append(p)
+            self.refcount[p] -= 1
+            if self.refcount[p]:
+                continue
+            del self.refcount[p]
+            if p in self.page_hash and self.sv.prefix_lru:
+                self.warm[p] = None                       # most-recently freed
+                self.warm.move_to_end(p)
+            else:
+                h = self.page_hash.pop(p, None)
+                if h is not None:
+                    del self.index[h]
+                self.blank.append(p)
+        self._chain.pop(rid, None)
 
+    # -- prefix cache ------------------------------------------------------
+    def _match(self, tokens: np.ndarray) -> Tuple[List[int], int]:
+        """Pure longest-indexed-prefix walk: (matched pages, chain hash at
+        the match point).  Capped strictly below len(tokens) so a caller
+        always recomputes at least the final token (whose logits produce
+        the next token) — and therefore never writes a shared page: the
+        capped page is re-prefilled into a fresh private one instead
+        (recompute-style copy-on-write)."""
+        ps = self.sv.page_size
+        max_full = max(len(tokens) - 1, 0) // ps
+        h = _HASH_SEED
+        shared: List[int] = []
+        for i in range(max_full):
+            h_next = _chain_hash(h, tokens[i * ps:(i + 1) * ps])
+            page = self.index.get(h_next)
+            if page is None:
+                break
+            shared.append(page)
+            h = h_next
+        return shared, h
+
+    def admit_request(self, rid: int, tokens: np.ndarray,
+                      n_tokens: int) -> Optional[int]:
+        """Admission-time allocation, all-or-nothing: match the prefix
+        cache, take shared holds (refcount++) on the matched pages, and
+        allocate private pages for the remainder of `n_tokens` slots.
+        Returns the hit length in tokens, or None when the request doesn't
+        fit — in which case *nothing* changed: no refcounts, no LRU
+        touches, no hit counters (a queue head blocked on capacity retries
+        every step and must not inflate stats or churn eviction order)."""
+        assert rid not in self.pages, f"rid {rid} already holds pages"
+        if n_tokens > self.sv.max_ctx:
+            return None
+        shared, h = self._match(tokens) if self.sv.prefix_cache \
+            else ([], _HASH_SEED)
+        # shared pages currently warm stop being allocatable once held
+        warm_shared = sum(1 for p in shared if not self.refcount.get(p))
+        need = self.pages_for(n_tokens) - len(shared)
+        if need > self.available - warm_shared:
+            return None
+        for p in shared:
+            if not self.refcount.get(p):
+                del self.warm[p]                          # warm -> in use
+            self.refcount[p] = self.refcount.get(p, 0) + 1
+        have = self.pages[rid] = list(shared)
+        for _ in range(max(need, 0)):
+            page = self._alloc_page()
+            self.refcount[page] = 1
+            have.append(page)
+        self._chain[rid] = (len(shared), h)
+        self.high_water = max(self.high_water, self.in_use)
+        if self.sv.prefix_cache:
+            self.n_lookups += 1
+            self.n_hit_tokens += len(shared) * self.sv.page_size
+        return len(shared) * self.sv.page_size
+
+    def register_upto(self, rid: int, tokens: np.ndarray, n_valid: int) -> None:
+        """Index every full page of rid's prefix whose contents are written
+        (tokens[:n_valid] are cached device-side).  Idempotent and
+        incremental: the per-rid chain state resumes where the last call
+        stopped.  First-writer-wins — if another page already owns a hash,
+        ours stays private (duplicate content, freed back to blank later)."""
+        if not self.sv.prefix_cache:
+            return
+        ps = self.sv.page_size
+        have = self.pages.get(rid, [])
+        done, h = self._chain.get(rid, (0, _HASH_SEED))
+        full = min(n_valid // ps, len(have))
+        for i in range(done, full):
+            h = _chain_hash(h, tokens[i * ps:(i + 1) * ps])
+            page = have[i]
+            if h not in self.index and page not in self.page_hash:
+                self.index[h] = page
+                self.page_hash[page] = h
+        self._chain[rid] = (full, h)
+
+    # -- block tables ------------------------------------------------------
     def table_row(self, rid: int) -> np.ndarray:
-        row = np.zeros((self.sv.pages_per_seq,), np.int32)
+        """Unallocated logical slots carry the out-of-bounds sentinel
+        (== num_pages): `paged_write` drops writes through it and
+        `paged_read` gathers zeros — a dead slot can never alias physical
+        page 0 and silently resurface another request's data."""
+        row = np.full((self.sv.pages_per_seq,), self.sv.num_pages, np.int32)
         have = self.pages.get(rid, [])
         row[: len(have)] = have
         return row
@@ -238,11 +430,14 @@ class PagedKVCacheManager:
 class ContinuousKVCache:
     """The contiguous (static-slot) layout behind the same manager interface:
     each batch slot owns a full max_ctx cache row, so `ensure` only checks
-    the context bound and there is nothing to allocate or preempt."""
+    the context bound and there is nothing to allocate, share, or preempt."""
 
     def __init__(self, sv: ServingConfig):
         self.sv = sv
         self.high_water = 0
+        self.n_lookups = 0
+        self.n_hit_tokens = 0
+        self.n_evictions = 0
 
     @property
     def available(self) -> int:
@@ -254,10 +449,19 @@ class ContinuousKVCache:
     def fits_alone(self, n_tokens: int) -> bool:
         return n_tokens <= self.sv.max_ctx
 
+    def capacity_desc(self) -> str:
+        return f"max_ctx={self.sv.max_ctx}"
+
     def ensure(self, rid: int, n_tokens: int) -> bool:
         return n_tokens <= self.sv.max_ctx
 
     def release(self, rid: int) -> None:
+        pass
+
+    def admit_request(self, rid: int, tokens, n_tokens: int) -> Optional[int]:
+        return 0 if n_tokens <= self.sv.max_ctx else None
+
+    def register_upto(self, rid: int, tokens, n_valid: int) -> None:
         pass
 
     def table_row(self, rid: int) -> Optional[np.ndarray]:

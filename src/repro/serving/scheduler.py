@@ -3,12 +3,16 @@
 Requests join the running set at decode-step boundaries (admission triggers a
 prefill), leave it the step they finish, and are preempted back to the front
 of the queue when the page pool runs dry.  Preemption is recompute-style: the
-victim's pages are freed and on re-admission its full prefix (prompt + tokens
+victim's pages are released and on re-admission the prefix (prompt + tokens
 generated so far) is re-prefilled — no KV swap-out traffic, the same policy
-vLLM defaults to for short sequences.  Resume is lossless for greedy decode
-with non-lossy cache dtypes (the bf16 cache stores K/V exactly); with an
-int8/int4 KV cache the recomputed prefix attends in full precision, so a
-resumed request's tokens may legitimately differ from an uninterrupted run.
+vLLM defaults to for short sequences.  With the prefix cache on, the victim's
+full pages usually survive in the warm pool, so admission re-acquires them
+and only the uncached tail is actually recomputed.  Resume is lossless for
+greedy decode with non-lossy cache dtypes (the bf16 cache stores K/V
+exactly); with an int8/int4 KV cache the recomputed prefix attends in full
+precision, so a resumed request's tokens may legitimately differ from an
+uninterrupted run (prefix-cache hits over a lossy pool dequantize, with the
+same caveat).
 
 Determinism: slots are assigned lowest-free-first, the decode batch is the
 running set in slot order, and the preemption victim is always the
@@ -85,23 +89,34 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new} exceeds serving capacity "
-                f"(max_ctx={self.kv.sv.max_ctx}, pool={self.kv.sv.num_pages} "
-                f"pages)")
+                f"({self.kv.capacity_desc()})")
         self.waiting.append(req)
 
     # -------------------------------------------------------- admission --
     def admit(self, now: float) -> List[Request]:
         """Admit queue-head requests that have arrived and fit (a free batch
         slot + pages for prefix and the first decode write).  FIFO: a stuck
-        head blocks later arrivals — no starvation."""
+        head blocks later arrivals — no starvation.
+
+        With the prefix cache on, admission (`kv.admit_request`) first
+        matches the longest cached page-aligned prefix: the request starts
+        at ``n_cached = hit_len`` over shared (refcounted) pages and the
+        engine prefills only the tail — this is also what makes
+        preempt→resume re-prefill just the uncached suffix, since a
+        victim's registered pages outlive its release.  Admission is
+        all-or-nothing: a request that doesn't fit leaves no holds, no
+        counter bumps, and no LRU churn behind."""
         admitted = []
         while self.waiting and self._free_slots:
             req = self.waiting[0]
             if req.arrival > now:
                 break
-            if not self.kv.ensure(req.rid, len(req.prefix) + 1):
-                break                        # ensure is all-or-nothing
+            prefix = req.prefix
+            hit = self.kv.admit_request(req.rid, prefix, len(prefix) + 1)
+            if hit is None:
+                break
             self.waiting.popleft()
+            req.n_cached = hit
             req.slot = heapq.heappop(self._free_slots)
             req.state = RUNNING
             req.t_admit = now
@@ -118,6 +133,10 @@ class Scheduler:
         del self.running[victim.rid]
         victim.slot = -1
         victim.state = WAITING
+        # n_cached is re-derived at admission (admit_request): a victim
+        # whose registered pages survive in the warm pool re-admits at its
+        # hit length instead of re-prefilling the whole prefix.  Zero here
+        # only states "nothing owned while waiting".
         victim.n_cached = 0
         victim.n_preempts += 1
         self.n_preemptions += 1
