@@ -424,11 +424,15 @@ def bench_serving():
         engine.warmup([8, 16, 32])
         stats, _ = run_trace(engine, trace)
         us = stats["wall_s"] * 1e6 / max(stats["steps"], 1)
+        rc = stats["recompiles"]
         emit(f"serving.{layout}", us,
              f"tok_per_s={stats['decode_tok_per_s']:.2f};"
              f"p50_s={stats['latency_p50_s']:.3f};"
              f"p95_s={stats['latency_p95_s']:.3f};"
-             f"preempt={stats['requests_preempted']}")
+             f"preempt={stats['requests_preempted']};"
+             f"pool_peak={stats['kv_pages_high_water']};"
+             f"recompiles={rc['total']};"
+             f"recompiles_steady={rc['steady_state']}")
 
     sp_trace = shared_prefix_trace(8, 0.5, 32, [8, 16], [8, 16], cfg.vocab,
                                    seed=0)
@@ -441,11 +445,15 @@ def bench_serving():
         engine.warmup([8, 16, 40, 48])
         stats, _ = run_trace(engine, sp_trace)
         us = stats["wall_s"] * 1e6 / max(stats["steps"], 1)
+        rc = stats["recompiles"]
         emit(f"serving.{name}", us,
              f"tok_per_s={stats['decode_tok_per_s']:.2f};"
              f"hit_rate={stats['prefix_hit_rate']:.3f};"
              f"prefill_saved={stats['tokens_prefilled_saved']};"
-             f"prefill={stats['prefill_tokens']}")
+             f"prefill={stats['prefill_tokens']};"
+             f"pool_peak={stats['kv_pages_high_water']};"
+             f"recompiles={rc['total']};"
+             f"recompiles_steady={rc['steady_state']}")
 
 
 def bench_sensitivity():
@@ -465,6 +473,23 @@ def bench_sensitivity():
         emit(f"sensitivity.{row['site']}", 0.0,
              f"mse={row['mse_vs_float']:.3e};"
              f"delta={row['delta_vs_uniform']:.3e}")
+
+
+def check_recompiles(rows: dict) -> list:
+    """Steady-state recompile gate over the emitted rows: any serving row
+    carrying ``recompiles_steady=N`` with N > 0 fails the run.  This is the
+    perf gate's blind spot closed — a change can keep wall time flat on a
+    short bench while silently recompiling every bucket mid-run, and only
+    this counter (observability.jit_watch) sees it."""
+    import re
+
+    failures = []
+    for name, row in sorted(rows.items()):
+        m = re.search(r"recompiles_steady=(\d+)", row["derived"])
+        if m and int(m.group(1)) > 0:
+            failures.append(f"{name}: {m.group(1)} steady-state "
+                            f"recompile(s) — buckets recompiled mid-run")
+    return failures
 
 
 def _gate_rows(rows: dict, base: dict):
@@ -569,6 +594,11 @@ def main(argv=None) -> int:
             json.dump({"backend": jax.default_backend(), "rows": ROWS},
                       f, indent=1, sort_keys=True)
         print(f"wrote {len(ROWS)} rows -> {args.out}")
+    recompile_failures = check_recompiles(ROWS)
+    if recompile_failures:
+        print("RECOMPILE GATE FAILED:\n  "
+              + "\n  ".join(recompile_failures), file=sys.stderr)
+        return 1
     if args.baseline:
         failures = check_regression(ROWS, args.baseline, args.gate_tol)
         if failures:

@@ -29,6 +29,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.observability.metrics import global_registry
+
 from . import autotune, packing, paged_attention, ref
 from .int4_matmul import int4_matmul as _int4_matmul
 from .int4_matmul import int4_matmul_fused as _int4_matmul_fused
@@ -49,6 +51,19 @@ def _mode(interpret: Optional[bool]) -> str:
     return _PALLAS if jax.default_backend() == "tpu" else _XLA
 
 
+def _count_dispatch(op: str, mode: str) -> None:
+    """Record a backend-dispatch decision in the process-global registry
+    (these wrappers are module-level, with no engine to hang off).  Fires
+    at trace time, so the count is per *compiled program* that uses the op
+    — a steady-state serving run shows one bump per (op, jit signature),
+    not one per step; a climbing count during steady state is the same
+    smell JitWatch flags."""
+    global_registry().counter(
+        "kernel_dispatch_total",
+        "kernel backend-dispatch decisions (counted at trace time)",
+        op=op, mode=mode).inc()
+
+
 def use_pallas(interpret: Optional[bool] = None) -> bool:
     """True when the Pallas kernels (compiled or interpreted) would run."""
     return _mode(interpret) != _XLA
@@ -66,6 +81,7 @@ def mul4(a_q, b_q, strategy: str = "onehot",
          interpret: Optional[bool] = None):
     """Elementwise exact int4 product."""
     m = _mode(interpret)
+    _count_dispatch("mul4", m)
     if m == _XLA:
         return ref.mul4_ref(a_q, b_q)
     return _lut_mul4(a_q, b_q, strategy=strategy,
@@ -81,6 +97,7 @@ def int4_matmul(a_q, a_scale, w_packed, w_scale,
     """
     m = _mode(interpret)
     if m == _XLA:
+        _count_dispatch("int4_matmul", m)
         return ref.int4_matmul_ref(a_q, a_scale, w_packed, w_scale)
     return int4_matmul_kmajor(
         a_q, a_scale, packing.prepack_kmajor(w_packed), w_scale,
@@ -92,6 +109,7 @@ def int4_matmul_kmajor(a_q, a_scale, w_kmajor, w_scale,
                        bm=None, bn=None, bk=None):
     """W4A4 matmul on planar K-major weights ([ceil(K/2), N] uint8)."""
     m = _mode(interpret)
+    _count_dispatch("int4_matmul_kmajor", m)
     if m == _XLA:
         w_q = packing.unpack_kmajor(w_kmajor)[: a_q.shape[1]]
         acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
@@ -110,6 +128,7 @@ def int4_matmul_fused(x, w_packed, w_scale,
     dequant in one pallas_call (A4 activations never round-trip HBM)."""
     m = _mode(interpret)
     if m == _XLA:
+        _count_dispatch("int4_matmul_fused", m)
         return ref.int4_matmul_fused_ref(x, w_packed, w_scale)
     return int4_matmul_fused_kmajor(
         x, packing.prepack_kmajor(w_packed), w_scale,
@@ -120,6 +139,7 @@ def int4_matmul_fused_kmajor(x, w_kmajor, w_scale,
                              interpret: Optional[bool] = None, tag: str = "",
                              bm=None, bn=None, bk=None):
     m = _mode(interpret)
+    _count_dispatch("int4_matmul_fused_kmajor", m)
     if m == _XLA:
         # kmajor-holding caller on a non-Pallas backend (e.g. qdense traced
         # on CPU): same math through the XLA twin
@@ -143,6 +163,7 @@ def w4a16_matmul(x, w_packed, w_scale, group_size: int,
     """
     m = _mode(interpret)
     if m == _XLA:
+        _count_dispatch("w4a16_matmul", m)
         return ref.w4a16_matmul_ref(x, w_packed, w_scale, group_size)
     # grouped scales: align K to 2*G at repack time so each planar half
     # covers whole groups (padding rows are zero int4 values)
@@ -157,6 +178,7 @@ def w4a16_matmul_kmajor(x, w_kmajor, w_scale, group_size: int,
                         bm=None, bn=None, bk=None):
     """W4A16 matmul on planar K-major weights ([ceil(K/2), N] uint8)."""
     m = _mode(interpret)
+    _count_dispatch("w4a16_matmul_kmajor", m)
     if m == _XLA:
         w_q = packing.unpack_kmajor(w_kmajor)[: x.shape[1]]
         K, N = w_q.shape
@@ -188,6 +210,7 @@ def paged_decode_attention(q, k_pool, v_pool, tbl, last_pos,
     ``bk`` is kv tokens per program, ``bn`` the KV-head tile.
     """
     m = _mode(interpret)
+    _count_dispatch("paged_decode_attention", m)
     B, H, hd = q.shape
     ps = k_pool.shape[1]
     max_ctx = tbl.shape[1] * ps
@@ -213,6 +236,7 @@ def flash_prefill(q, k, v, q_positions, k_positions, *, window: int = 0,
     Tiles resolve through ``kernels.autotune`` op ``attn.prefill``.
     """
     m = _mode(interpret)
+    _count_dispatch("flash_prefill", m)
     B, Sq, H, hd = q.shape
     b = autotune.get_blocks("attn.prefill", Sq, k.shape[1], H * hd,
                             jnp.dtype(q.dtype).name, tag=tag)

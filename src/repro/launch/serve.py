@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import Runtime, ServingConfig, get_config
+from repro.observability import Telemetry, global_registry
 from repro.serving.api import poisson_trace, run_trace, shared_prefix_trace
 from repro.serving.engine import InferenceEngine, build_params
 
@@ -109,7 +110,8 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
           prompt_lens=(8, 16, 32), gen_lens=(8, 16), scenario="poisson",
           sys_len=32, prefix_cache=True,
           quant_backend="w4a4_packed", quant_plan=None, cache_dtype="bfloat16",
-          quantized_ckpt=False, ckpt_dir=None, sweep=False, seed=0):
+          quantized_ckpt=False, ckpt_dir=None, sweep=False, seed=0,
+          trace_out=None, metrics=True):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced(**({"n_layers": layers} if layers else {}))
@@ -174,12 +176,21 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
                            max_ctx=max_ctx,
                            prefix_cache=(prefix_cache
                                          and lay != "paged_nocache"))
-        engine = InferenceEngine(cfg, rt_lay, sv, params=params)
+        # per-engine telemetry (compare-mode engines keep separate
+        # registries); the Perfetto timeline records the primary layout
+        tm = Telemetry(metrics=metrics,
+                       trace=bool(trace_out) and lay == layouts[0])
+        engine = InferenceEngine(cfg, rt_lay, sv, params=params,
+                                 telemetry=tm)
         engine.warmup(warm_lens)       # compiles excluded from the stats
         stats, finished = run_trace(engine, trace)
         stats["profile"] = engine.profile()   # attn vs GEMM attribution
+        stats["profile_at_step"] = stats["profile"].get("at_step")
         report[lay] = stats
         tokens_by_layout[lay] = [r.tokens for r in finished]
+        if tm.trace.enabled:
+            tm.trace.save(trace_out)
+            report["trace_out"] = trace_out
 
     if params_ref is not None:
         # end-to-end: the restored-checkpoint engine must generate exactly
@@ -228,6 +239,12 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
     report["latency_p95_s"] = primary["latency_p95_s"]
     report["prefix_hit_rate"] = primary.get("prefix_hit_rate", 0.0)
     report["tokens_prefilled_saved"] = primary.get("tokens_prefilled_saved", 0)
+    # telemetry headlines: steady-state recompiles (should be 0 — see
+    # observability.jit_watch) and the process-wide kernel dispatch mix
+    report["recompiles_steady_state"] = (
+        primary.get("recompiles", {}).get("steady_state", 0))
+    report["kernel_dispatch"] = (
+        global_registry().snapshot()["counters"])
     return report
 
 
@@ -278,6 +295,13 @@ def main():
     ap.add_argument("--sweep", action="store_true",
                     help="add the per-site sensitivity table to the report")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome/Perfetto trace_event JSON timeline "
+                         "of the primary layout's run (open at "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--metrics", default="on", choices=["on", "off"],
+                    help="per-engine telemetry registries (off: stats() "
+                         "reports empty metrics/recompiles)")
     ap.add_argument("--out", default=None,
                     help="also write the JSON report to this path")
     args = ap.parse_args()
@@ -296,6 +320,7 @@ def main():
         cache_dtype=args.cache_dtype,
         quantized_ckpt=args.quantized_ckpt, ckpt_dir=args.ckpt_dir,
         sweep=args.sweep, seed=args.seed,
+        trace_out=args.trace_out, metrics=args.metrics == "on",
     )
     text = json.dumps(out, indent=1)
     print(text)

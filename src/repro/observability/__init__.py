@@ -1,0 +1,71 @@
+"""Serving telemetry substrate (dependency-free, host-side only).
+
+Three pillars, one bundle:
+
+  * ``metrics``   -- counters / gauges / bounded-bucket histograms in a
+                     ``MetricsRegistry``; Prometheus text exposition +
+                     JSON snapshot (merged into engine ``stats()`` and the
+                     serve.py report).
+  * ``trace``     -- ring-buffered span recorder exporting Chrome/Perfetto
+                     ``trace_event`` JSON (``serve --trace-out t.json``):
+                     the run as a timeline, one lane per request slot.
+  * ``jit_watch`` -- recompile sentinel: jit cache-miss deltas per step
+                     function, tagged with the triggering bucket shape;
+                     steady-state recompiles are a loud metric and an
+                     optional hard failure (``strict``).
+
+``Telemetry`` is the bundle the engine threads through the scheduler and
+page pool.  Everything is host-side bookkeeping — no jax imports, nothing
+on the traced path — so telemetry on vs off is token-identical by
+construction (asserted end-to-end in tests/test_observability.py).
+"""
+
+from repro.observability.jit_watch import (  # noqa: F401
+    NULL_JIT_WATCH,
+    JitWatch,
+    NullJitWatch,
+    RecompileError,
+)
+from repro.observability.metrics import (  # noqa: F401
+    COUNT_BUCKETS,
+    NULL_REGISTRY,
+    TIME_BUCKETS_US,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullRegistry,
+    global_registry,
+)
+from repro.observability.trace import (  # noqa: F401
+    NULL_TRACE,
+    NullTrace,
+    TraceRecorder,
+)
+
+
+class Telemetry:
+    """The per-engine telemetry bundle: a metrics registry, a trace
+    recorder, and a recompile sentinel, each independently enable-able.
+
+    Defaults are production-shaped: metrics on (cheap host-side updates),
+    trace off (enable per run via ``trace=True`` / serve ``--trace-out``),
+    sentinel counting but not raising (``strict_recompiles=True`` turns a
+    steady-state recompile into an exception — the tests' mode).
+    """
+
+    def __init__(self, metrics: bool = True, trace: bool = False,
+                 trace_capacity: int = 1 << 16,
+                 strict_recompiles: bool = False):
+        self.registry = MetricsRegistry() if metrics else NULL_REGISTRY
+        self.trace = TraceRecorder(trace_capacity) if trace else NULL_TRACE
+        self.jit_watch = (JitWatch(self.registry, strict=strict_recompiles)
+                          if metrics else NULL_JIT_WATCH)
+
+    @property
+    def enabled(self) -> bool:
+        return self.registry.enabled or self.trace.enabled
+
+    @classmethod
+    def disabled(cls) -> "Telemetry":
+        return cls(metrics=False, trace=False)

@@ -45,6 +45,17 @@ class ServingAPI:
     def stats(self) -> Dict:
         return self.engine.stats()
 
+    # ------------------------------------------------------- telemetry --
+    @property
+    def trace(self):
+        """The engine's trace recorder (save()/to_chrome() for Perfetto)."""
+        return self.engine.trace
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the engine's registry — the body
+        a network frontend's /metrics endpoint would serve."""
+        return self.engine.metrics.render_text()
+
 
 def poisson_trace(
     n_requests: int,

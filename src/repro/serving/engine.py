@@ -24,6 +24,18 @@ same per-row math.  The layouts differ only in where KV bytes live:
 `profile()` attributes one decode step's cost: the attention op is timed
 standalone (the same kernels.ops dispatch the model executes) against the
 full step time, so perf PRs can tell attention regressions from GEMM ones.
+The result is stamped with the step counter at capture time
+(``profile_at_step`` in ``stats()``), so a report can't silently pair a
+warmup-window profile with end-of-run stats.
+
+Telemetry (``repro.observability``): every engine owns a `Telemetry`
+bundle — a metrics registry fed at the natural seams (TTFT/ITL histograms
+at retire time, queue/pool gauges at step boundaries, token counters at
+prefill/decode), a trace recorder that renders the run as a Perfetto
+timeline (one lane per batch slot: request residency segments, admission
+prefills, preemption ends), and a jit recompile sentinel polled after
+every prefill/decode call.  All of it is host-side bookkeeping off the
+traced path: telemetry on vs off is token-identical by construction.
 """
 
 from __future__ import annotations
@@ -39,6 +51,7 @@ from repro.configs.base import ArchConfig, Runtime, ServingConfig
 from repro.core.quant_plan import pack_for_serving
 from repro.kernels import autotune
 from repro.launch.steps import make_serving_steps
+from repro.observability import COUNT_BUCKETS, Telemetry
 from repro.models import init_caches, init_model
 from repro.serving.kv_pages import (
     ContinuousKVCache,
@@ -72,7 +85,8 @@ class InferenceEngine:
     """submit() requests, step() the world, collect() finished requests."""
 
     def __init__(self, cfg: ArchConfig, rt: Runtime, sv: ServingConfig,
-                 params=None, seed: int = 0, clock=time.time):
+                 params=None, seed: int = 0, clock=time.time,
+                 telemetry: Optional[Telemetry] = None):
         # continuous batching puts rows at different positions: cache writes
         # must scatter per-row, never assume step-aligned DUS
         import dataclasses
@@ -87,11 +101,22 @@ class InferenceEngine:
             " use layout='contiguous'")
         self.cfg, self.rt, self.sv = cfg, rt, sv
         self.clock = clock
+        # telemetry bundle: per-engine registry (compare-mode engines don't
+        # share counters), trace recorder, recompile sentinel
+        self.tm = telemetry if telemetry is not None else Telemetry()
+        self.metrics = self.tm.registry
+        self.trace = self.tm.trace
+        self.trace.lane(0, "engine")
+        for s in range(sv.max_batch):
+            self.trace.lane(1 + s, f"slot{s}")
+        # rid -> (trace t0, slot): open request-residency segment, emitted
+        # as one span on the slot's lane when the request retires/preempts
+        self._seg: Dict[int, tuple] = {}
         self.params = params if params is not None \
             else build_params(cfg, rt, seed)
 
         if sv.layout == "paged":
-            self.kv = PagedKVCacheManager(sv)
+            self.kv = PagedKVCacheManager(sv, metrics=self.metrics)
             # batch=0 template: pool leaves are batch-independent; block
             # tables are rebound per call (inside the jit'd steps) from the
             # device-resident [max_batch, pages_per_seq] table pool.  Rows
@@ -109,10 +134,11 @@ class InferenceEngine:
             # still re-upload if the ids (or its slot) differ.
             self._tbl_ver: Dict[int, tuple] = {}
         else:
-            self.kv = ContinuousKVCache(sv)
+            self.kv = ContinuousKVCache(sv, metrics=self.metrics)
             self.caches = init_caches(cfg, rt, batch=sv.max_batch,
                                       seq=sv.max_ctx)
-        self.scheduler = Scheduler(self.kv, sv.max_batch)
+        self.scheduler = Scheduler(self.kv, sv.max_batch,
+                                   metrics=self.metrics)
         # tuned (bm, bn, bk) tiles for every prefill/decode GEMM and for the
         # fused paged-attention kernels: qdense and kernels.ops resolve
         # blocks through kernels.autotune at trace time, so loading the
@@ -120,6 +146,12 @@ class InferenceEngine:
         autotune.ensure_loaded()
         self._prefill, self._prefill_tail, self._decode = make_serving_steps(
             cfg, rt, paged=sv.layout == "paged")
+        # recompile sentinel: every step function is polled after each call
+        # (warmup included), so a compile is always attributed to the
+        # bucket shape that triggered it
+        self.tm.jit_watch.register("prefill", self._prefill)
+        self.tm.jit_watch.register("prefill_tail", self._prefill_tail)
+        self.tm.jit_watch.register("decode", self._decode)
 
         self._next_rid = 0
         self._finished: List[Request] = []
@@ -131,6 +163,7 @@ class InferenceEngine:
         self.n_prefix_hit_tokens = 0     # prompt/resume tokens served from cache
         self.t_start = None
         self._profile: Optional[Dict] = None
+        self._profile_step: Optional[int] = None
 
     # -------------------------------------------------------------- api --
     def submit(self, prompt, max_new: int, arrival: Optional[float] = None,
@@ -145,6 +178,8 @@ class InferenceEngine:
         req.t_visible = now
         self._all[rid] = req
         self.scheduler.submit(req)
+        self.metrics.counter("requests_submitted_total",
+                             "requests accepted into the queue").inc()
         return rid
 
     def collect(self) -> List[Request]:
@@ -166,6 +201,7 @@ class InferenceEngine:
                     self.params, tokens, self.caches, positions,
                     self._tbl, jnp.zeros((1,), jnp.int32))
                 self._strip_tables()
+                self._poll_jit("prefill", (1, L))
                 if self.sv.prefix_cache:
                     # prefix hits run the tail-prefill step over the same
                     # bucket set (a tail can also land in a smaller bucket
@@ -174,10 +210,12 @@ class InferenceEngine:
                         self.params, tokens, self.caches, positions,
                         self._tbl, jnp.zeros((1,), jnp.int32))
                     self._strip_tables()
+                    self._poll_jit("prefill_tail", (1, L))
             else:
                 row = init_caches(self.cfg, self.rt, batch=1,
                                   seq=self.sv.max_ctx)
                 self._prefill(self.params, tokens, row, positions)
+                self._poll_jit("prefill", (1, L))
         for nb in self.sv.buckets:
             tok = jnp.zeros((nb, 1), jnp.int32)
             pos = jnp.full((nb, 1), -1, jnp.int32)
@@ -189,23 +227,75 @@ class InferenceEngine:
             else:
                 sub = gather_rows(self.caches, [0] * nb)
                 self._decode(self.params, tok, sub, pos)
+            self._poll_jit("decode", (nb, 1))
 
     def step(self) -> int:
         """One decode-step boundary; returns the number of running requests
         after the step (0 = idle)."""
+        t0 = time.perf_counter()
+        tt0 = self.trace.now()
         now = self.clock()
         if self.t_start is None:
             self.t_start = now
-        for req in self.scheduler.admit(now):
+        admitted = self.scheduler.admit(now)
+        n_tail = sum(1 for r in admitted if r.n_cached)
+        for req in admitted:
             self._prefill_request(req)
         self._retire()                 # a 1-token request is done at prefill
-        self.scheduler.ensure_decode()
+        for req in self.scheduler.ensure_decode():
+            # recompute-style preemption ends the slot residency: close the
+            # segment so the timeline shows the slot going dark
+            seg = self._seg.pop(req.rid, None)
+            if seg is not None:
+                self.trace.complete(f"r{req.rid}", 1 + seg[1], seg[0],
+                                    rid=req.rid, outcome="preempted",
+                                    gen=len(req.tokens))
         batch = self.scheduler.batch()
         if batch:
             self._decode_batch(batch)
         self.n_steps += 1
         self._retire()
+        self._observe_step(t0, tt0, admitted, n_tail, batch)
         return len(self.scheduler.running)
+
+    def _observe_step(self, t0: float, tt0: float, admitted: List[Request],
+                      n_tail: int, batch: List[Request]) -> None:
+        """Per-step telemetry: wall time + batch composition into the
+        registry, occupancy gauges sampled at the step boundary, and the
+        engine-lane step span."""
+        m = self.metrics
+        m.counter("steps_total", "engine decode-step boundaries").inc()
+        m.histogram("step_wall_us",
+                    "wall time per engine step").observe(
+                        (time.perf_counter() - t0) * 1e6)
+        if batch:
+            m.histogram("decode_batch_size", "running rows per decode step",
+                        buckets=COUNT_BUCKETS).observe(len(batch))
+        m.gauge("queue_depth",
+                "requests waiting for admission").set(
+                    len(self.scheduler.waiting))
+        m.gauge("running_requests",
+                "requests in the decode batch").set(
+                    len(self.scheduler.running))
+        if self.sv.layout == "paged":
+            m.gauge("kv_pool_in_use_pages",
+                    "pages held by running requests").set(self.kv.in_use)
+            m.gauge("kv_pool_warm_pages",
+                    "refcount-0 pages still indexed").set(len(self.kv.warm))
+            m.gauge("kv_pool_blank_pages",
+                    "free pages with no content").set(len(self.kv.blank))
+            m.gauge("kv_pool_occupancy",
+                    "in-use fraction of the page pool").set(
+                        self.kv.in_use / self.sv.num_pages)
+            m.gauge("kv_pool_high_water_pages",
+                    "peak concurrent in-use pages").set(self.kv.high_water)
+        if self.trace.enabled:
+            self.trace.complete(
+                "step", 0, tt0,
+                decode_rows=len(batch),
+                prefills=len(admitted) - n_tail, tail_prefills=n_tail,
+                queue_depth=len(self.scheduler.waiting),
+                pool_in_use=getattr(self.kv, "in_use", 0))
 
     def _retire(self) -> None:
         now = self.clock()
@@ -213,6 +303,32 @@ class InferenceEngine:
             if req.done:
                 self.scheduler.finish(req, now)
                 self._finished.append(req)
+                self._observe_finish(req)
+
+    def _observe_finish(self, req: Request) -> None:
+        """Per-request latency telemetry, recorded the moment the request
+        retires (t_finish just stamped): TTFT, mean inter-token latency,
+        end-to-end latency — the histograms the SLO scheduler and
+        autoscaling signal (ROADMAP item 3) will consume."""
+        m = self.metrics
+        m.counter("requests_finished_total", "requests fully decoded").inc()
+        m.histogram("request_latency_us",
+                    "submit-to-finish wall time").observe(
+                        (req.t_finish - req.t_visible) * 1e6)
+        if req.t_first is not None:
+            m.histogram("ttft_us", "time to first token").observe(
+                (req.t_first - req.t_visible) * 1e6)
+            if len(req.tokens) > 1:
+                m.histogram("itl_us",
+                            "mean inter-token latency per request").observe(
+                                (req.t_finish - req.t_first) * 1e6
+                                / (len(req.tokens) - 1))
+        seg = self._seg.pop(req.rid, None)
+        if seg is not None:
+            self.trace.complete(f"r{req.rid}", 1 + seg[1], seg[0],
+                                rid=req.rid, outcome="finished",
+                                gen=len(req.tokens),
+                                preempts=req.n_preempts)
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
         for _ in range(max_steps):
@@ -221,6 +337,12 @@ class InferenceEngine:
         raise RuntimeError(f"not idle after {max_steps} steps")
 
     # -------------------------------------------------------- internals --
+    def _poll_jit(self, name: str, shape) -> None:
+        """Poll the recompile sentinel right after a step-function call,
+        attributing any jit cache growth to `shape` (the bucket signature
+        of the call that just ran)."""
+        self.tm.jit_watch.after_call(name, shape, step=self.n_steps)
+
     def _prompt_pad(self, L: int) -> int:
         """Prompt lengths are bucketed (fewer compiles) for attention archs;
         SSM/LRU state integrates pad tokens, so those prefill at exact L."""
@@ -241,6 +363,9 @@ class InferenceEngine:
                 self._tbl = self._tbl.at[req.slot].set(
                     jnp.asarray(self.kv.table_row(req.rid)))
                 self._tbl_ver[req.rid] = ver
+                self.metrics.counter(
+                    "block_table_uploads_total",
+                    "host->device block-table row uploads").inc()
         # drop versions of finished/preempted requests so dead entries don't
         # accumulate.  Correctness doesn't ride on this prune: versions key
         # on (slot, page ids), so a resumed rid re-admitting with the very
@@ -273,6 +398,10 @@ class InferenceEngine:
         # after the hit offset shifts the real tail to hit..L-1
         positions = np.where(base >= 0, base + hit, -1)[None, :]
 
+        # open the slot-residency segment (resumes re-open a fresh one) and
+        # record this prefill as a span at its start
+        self._seg.setdefault(req.rid, (self.trace.now(), req.slot))
+        tp0 = self.trace.now()
         if self.sv.layout == "paged":
             self._sync_tables([req])
             step = self._prefill_tail if hit else self._prefill
@@ -281,6 +410,7 @@ class InferenceEngine:
                 jnp.asarray(positions), self._tbl,
                 jnp.asarray([req.slot], jnp.int32))
             self._strip_tables()
+            self._poll_jit("prefill_tail" if hit else "prefill", (1, Lb))
         else:
             # a fresh init row IS the reset: prefill into it, then scatter
             # the row into the slot (evicting any previous tenant's state)
@@ -288,10 +418,22 @@ class InferenceEngine:
             tok, row = self._prefill(
                 self.params, jnp.asarray(tokens), row, jnp.asarray(positions))
             self.caches = scatter_rows(self.caches, row, [req.slot])
+            self._poll_jit("prefill", (1, Lb))
+        self.trace.complete("tail_prefill" if hit else "prefill",
+                            1 + req.slot, tp0, rid=req.rid, tokens=n,
+                            hit=hit, bucket=Lb)
 
         req.n_cached = L
         self.n_prefill_tokens += n
         self.n_prefix_hit_tokens += hit
+        m = self.metrics
+        m.counter("prefill_tokens_total",
+                  "tokens pushed through prefill").inc(n)
+        if hit:
+            m.counter("tail_prefill_tokens_total",
+                      "prefill tokens behind a prefix-cache hit").inc(n)
+        m.counter("prefix_hit_tokens_total",
+                  "prompt/resume tokens served from cached pages").inc(hit)
         self.kv.register_upto(req.rid, prefix, L)   # index newly-full pages
         req.tokens.append(int(tok[0]))
         if req.t_first is None:
@@ -327,6 +469,9 @@ class InferenceEngine:
             # active slot, and duplicate scatter indices would race)
             self.caches = scatter_rows(
                 self.caches, gather_rows(sub, np.arange(n)), rows[:n])
+        self._poll_jit("decode", (nb, 1))
+        self.metrics.counter("decode_tokens_total",
+                             "tokens emitted by decode steps").inc(n)
         nxt = np.asarray(nxt)
         ps = self.sv.page_size
         for i, req in enumerate(batch):
@@ -398,7 +543,10 @@ class InferenceEngine:
                 "attn_us": 0.0,
                 "gemm_other_us": round(step_us, 1),
                 "attn_frac": 0.0,
+                "at_step": self.n_steps,
             }
+            self._profile_step = self.n_steps
+            self.tm.jit_watch.absorb()
             return self._profile
         if sv.layout == "paged":
             from repro.kernels import ops
@@ -443,16 +591,29 @@ class InferenceEngine:
             "gemm_other_us": round(max(step_us - attn_us, 0.0), 1),
             "attn_frac": round(min(attn_us / step_us, 1.0), 4)
             if step_us else None,
+            "at_step": self.n_steps,
         }
+        self._profile_step = self.n_steps
+        # the probe calls above may have compiled new signatures (a probe
+        # batch can hit an unvisited bucket): re-baseline the sentinel so
+        # those compiles don't masquerade as the next real step's recompile
+        self.tm.jit_watch.absorb()
         return self._profile
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> Dict:
         done = [r for r in self._all.values() if r.t_finish is not None]
         lat = [r.t_finish - r.t_visible for r in done]
-        ttft = [r.t_first - r.t_visible for r in done if r.t_first]
-        wall = (self.clock() - self.t_start) if self.t_start else 0.0
+        # `is not None`, not truthiness: a t_first of exactly 0.0 (fake
+        # clocks, epoch-zero traces) is a real first-token time
+        ttft = [r.t_first - r.t_visible for r in done
+                if r.t_first is not None]
+        wall = (self.clock() - self.t_start) \
+            if self.t_start is not None else 0.0
+        # every derived latency field degrades to None with zero finished
+        # requests — callers see requests_finished: 0 and no fake numbers
         pct = (lambda xs, q: float(np.percentile(xs, q)) if xs else None)
+        mean = (lambda xs: float(np.mean(xs)) if xs else None)
         demand = self.n_prefill_tokens + self.n_prefix_hit_tokens
         return {
             "layout": self.sv.layout,
@@ -475,10 +636,16 @@ class InferenceEngine:
             "decode_tok_per_s": self.n_decode_tokens / wall if wall else None,
             "latency_p50_s": pct(lat, 50),
             "latency_p95_s": pct(lat, 95),
+            "latency_mean_s": mean(lat),
             "ttft_p50_s": pct(ttft, 50),
             "ttft_p95_s": pct(ttft, 95),
+            "ttft_mean_s": mean(ttft),
             "kv_pages_high_water": getattr(self.kv, "high_water", 0),
             "paged_attn": self.rt.paged_attn
             if self.sv.layout == "paged" else None,
-            **({"profile": self._profile} if self._profile else {}),
+            "metrics": self.metrics.snapshot(),
+            "recompiles": self.tm.jit_watch.snapshot(),
+            **({"profile": self._profile,
+                "profile_at_step": self._profile_step}
+               if self._profile else {}),
         }

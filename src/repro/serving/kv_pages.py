@@ -68,6 +68,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, Runtime, ServingConfig
 from repro.models.attention import dequantize_kv, quantize_kv
+from repro.observability.metrics import NULL_REGISTRY
 
 
 # ------------------------------------------------------- device-side cache --
@@ -248,8 +249,12 @@ class PagedKVCacheManager:
     which is the invariant the allocator property test asserts.
     """
 
-    def __init__(self, sv: ServingConfig):
+    def __init__(self, sv: ServingConfig, metrics=None):
         self.sv = sv
+        # telemetry registry (observability.metrics); the manager bumps
+        # event counters at its natural seams, the engine samples occupancy
+        # gauges at step boundaries
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self.blank: deque = deque(range(sv.num_pages))
         self.warm: "OrderedDict[int, None]" = OrderedDict()  # refcount-0, indexed
         self.pages: Dict[int, List[int]] = {}
@@ -301,6 +306,8 @@ class PagedKVCacheManager:
             h = self.page_hash.pop(page)
             del self.index[h]
             self.n_evictions += 1
+            self.metrics.counter("prefix_evictions_total",
+                                 "warm pages evicted to blank").inc()
             return page
         return None
 
@@ -393,6 +400,14 @@ class PagedKVCacheManager:
         if self.sv.prefix_cache:
             self.n_lookups += 1
             self.n_hit_tokens += len(shared) * self.sv.page_size
+            self.metrics.counter("prefix_lookups_total",
+                                 "admission prefix-cache lookups").inc()
+            if shared:
+                self.metrics.counter("prefix_hits_total",
+                                     "admissions that matched >=1 page").inc()
+                self.metrics.counter("prefix_hit_pages_total",
+                                     "pages served from the cache").inc(
+                                         len(shared))
         return len(shared) * self.sv.page_size
 
     def register_upto(self, rid: int, tokens: np.ndarray, n_valid: int) -> None:
@@ -432,8 +447,9 @@ class ContinuousKVCache:
     each batch slot owns a full max_ctx cache row, so `ensure` only checks
     the context bound and there is nothing to allocate, share, or preempt."""
 
-    def __init__(self, sv: ServingConfig):
+    def __init__(self, sv: ServingConfig, metrics=None):
         self.sv = sv
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self.high_water = 0
         self.n_lookups = 0
         self.n_hit_tokens = 0

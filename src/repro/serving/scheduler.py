@@ -30,6 +30,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.observability.metrics import NULL_REGISTRY
+
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 
 
@@ -73,9 +75,13 @@ class Scheduler:
     """Owns the waiting queue and the running set; talks to a KV manager
     (PagedKVCacheManager or ContinuousKVCache) for capacity decisions."""
 
-    def __init__(self, kv_manager, max_batch: int):
+    def __init__(self, kv_manager, max_batch: int, metrics=None):
         self.kv = kv_manager
         self.max_batch = max_batch
+        # telemetry registry (observability.metrics): admission / resume /
+        # preemption counters land here; queue-depth and running-set gauges
+        # are sampled by the engine at step boundaries
+        self.metrics = metrics if metrics is not None else NULL_REGISTRY
         self.waiting: deque = deque()
         self.running: Dict[int, Request] = {}        # rid -> Request
         self._free_slots: List[int] = list(range(max_batch))
@@ -124,6 +130,12 @@ class Scheduler:
             self._admit_counter += 1
             self.running[req.rid] = req
             admitted.append(req)
+            self.metrics.counter("sched_admissions_total",
+                                 "requests admitted to the running set").inc()
+            if req.n_preempts:
+                self.metrics.counter(
+                    "sched_resumes_total",
+                    "admissions of previously-preempted requests").inc()
         return admitted
 
     # -------------------------------------------------------- preemption --
@@ -140,6 +152,8 @@ class Scheduler:
         victim.n_cached = 0
         victim.n_preempts += 1
         self.n_preemptions += 1
+        self.metrics.counter("sched_preemptions_total",
+                             "requests evicted on pool exhaustion").inc()
         self.waiting.appendleft(victim)   # resumes before new arrivals
 
     def ensure_decode(self) -> List[Request]:
