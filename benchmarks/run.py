@@ -405,11 +405,12 @@ def bench_gemm_backends():
 def bench_serving():
     """Continuous-batching engine throughput, paged vs contiguous KV, on a
     shared Poisson trace, plus the prefix-cache row: the shared-system-
-    prompt scenario served cold vs cached (reduced qwen2; see
-    EXPERIMENTS.md §Serving / §Prefix caching)."""
+    prompt scenario served cold vs cached, plus the bucketed-vs-ragged
+    step comparison under batch-composition churn (reduced qwen2; see
+    EXPERIMENTS.md §Serving / §Prefix caching / §Ragged serving)."""
     from repro.configs import Runtime, ServingConfig, get_config
-    from repro.serving.api import poisson_trace, run_trace, \
-        shared_prefix_trace
+    from repro.serving.api import bursty_trace, mixed_trace, poisson_trace, \
+        run_trace, shared_prefix_trace
     from repro.serving.engine import InferenceEngine, build_params
 
     cfg = get_config("qwen2-0.5b").reduced()
@@ -455,6 +456,37 @@ def bench_serving():
              f"recompiles={rc['total']};"
              f"recompiles_steady={rc['steady_state']}")
 
+    # bucketed vs ragged serving step under batch-composition churn: mixed
+    # (one arrival per step, cycling lengths) and bursty (admission spikes).
+    # Short generations keep admissions flowing, so the bucketed engine pays
+    # a full-prompt prefill launch plus a decode launch on most steps; the
+    # ragged engine runs ONE token-major launch per step regardless of
+    # composition, chunking prefills through its token budget (16 here —
+    # tuned, see EXPERIMENTS.md §Ragged serving: the auto budget optimizes
+    # TTFT, a tighter budget step wall).
+    step_traces = {
+        "mixed": mixed_trace(16, [16, 32, 64], [2, 4], cfg.vocab, seed=0),
+        "bursty": bursty_trace(16, 4, 4, [16, 32, 64], [2, 4], cfg.vocab,
+                               seed=0),
+    }
+    for sc_name, sc_trace in step_traces.items():
+        for mode in ("bucketed", "ragged"):
+            sv = ServingConfig(layout="paged", max_batch=4, page_size=16,
+                               num_pages=48, max_ctx=128, step=mode,
+                               token_budget=16 if mode == "ragged" else 0)
+            engine = InferenceEngine(cfg, rt, sv, params=params)
+            engine.warmup([16, 32, 64])
+            stats, _ = run_trace(engine, sc_trace)
+            us = stats["wall_s"] * 1e6 / max(stats["steps"], 1)
+            rc = stats["recompiles"]
+            emit(f"serving.step_{mode}_{sc_name}", us,
+                 f"tok_per_s={stats['decode_tok_per_s']:.2f};"
+                 f"padding_wasted={stats['padding_tokens_wasted']};"
+                 f"token_util={stats['token_utilization']:.3f};"
+                 f"steps={stats['steps']};"
+                 f"recompiles={rc['total']};"
+                 f"recompiles_steady={rc['steady_state']}")
+
 
 def bench_sensitivity():
     """Per-site quantization sensitivity sweep (reduced qwen2, 2 layers so
@@ -498,7 +530,7 @@ def _gate_rows(rows: dict, base: dict):
     for name, entry in sorted(base.items()):
         if name not in rows or "_interp" in name:
             continue
-        if not name.startswith(("kernels.", "gemm.")):
+        if not name.startswith(("kernels.", "gemm.", "serving.")):
             continue
         if name.startswith("kernels.autotune."):
             continue

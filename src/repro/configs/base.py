@@ -219,11 +219,35 @@ class ServingConfig:
     decode_buckets: Tuple[int, ...] = ()   # () => powers of two up to max_batch
     prefix_cache: bool = True       # shared-prefix KV page reuse (paged only)
     prefix_lru: bool = True         # keep refcount-0 pages cached until dry
+    # "ragged" packs every live request's tokens — chunked-prefill slices
+    # and decode tokens alike — into one flat [1, token_budget] buffer and
+    # runs ONE jit per step (kernels.ragged_attention); "bucketed" is the
+    # classic separate prefill/decode jits over padded bucket shapes.
+    step: str = "bucketed"          # bucketed | ragged (paged layout only)
+    # ragged step's padded token capacity per step; 0 = auto.  Decode
+    # tokens (one per running request) are packed first, prefill chunks
+    # fill the remainder.  The engine grows it (next power of two, one
+    # fresh compile) if running requests ever exceed it.
+    token_budget: int = 0
 
     def __post_init__(self):
         assert self.layout in ("paged", "contiguous"), self.layout
+        assert self.step in ("bucketed", "ragged"), self.step
+        assert self.step == "bucketed" or self.layout == "paged", \
+            "the ragged step packs tokens through block tables (paged only)"
         assert self.max_ctx % self.page_size == 0, \
             f"max_ctx {self.max_ctx} must be a multiple of page_size {self.page_size}"
+
+    @property
+    def budget(self) -> int:
+        """Effective ragged token budget: explicit (taken verbatim — may sit
+        below max_batch, in which case the engine doubles it at runtime the
+        step the decode set outgrows it: one fresh compile, never a
+        steady-state recompile), else enough for every decode slot plus a
+        healthy prefill chunk, power-of-two padded."""
+        if self.token_budget:
+            return self.token_budget
+        return self.prompt_bucket(self.max_batch + 2 * self.page_size)
 
     @property
     def pages_per_seq(self) -> int:

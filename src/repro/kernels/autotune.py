@@ -100,18 +100,24 @@ def _round_up(x: int, mult: int) -> int:
 
 
 #: attention ops reuse the (bm, bn, bk) entry format with attention
-#: semantics — bk = kv tokens per program (for ``attn.paged_decode`` that is
-#: pages_per_program * page_size, with page_size riding in the key's
-#: group_size slot), bn = KV-head tile (0 = all heads, kernels self-heal to
-#: a divisor), bm = q tile (prefill only; decode has one query token).
-ATTN_OPS = ("attn.paged_decode", "attn.prefill")
+#: semantics — bk = kv tokens per program (for ``attn.paged_decode`` and
+#: ``attn.ragged`` that is pages_per_program * page_size, with page_size
+#: riding in the key's group_size slot), bn = KV-head tile (0 = all heads,
+#: kernels self-heal to a divisor), bm = q tile (prefill only; decode and
+#: ragged rows carry one query token each).
+ATTN_OPS = ("attn.paged_decode", "attn.prefill", "attn.ragged")
+
+#: page-walking ops share the paged-decode heuristics (and therefore, on
+#: untuned hosts, the same pages-per-program — which keeps ragged decode
+#: rows bit-identical to the bucketed decode path's blocked XLA twin)
+_PAGED_ATTN_OPS = ("attn.paged_decode", "attn.ragged")
 
 
 def attn_default_blocks(op: str, M: int, K: int, N: int,
                         group_size: int = 0) -> Dict[str, int]:
-    """Heuristic tiles for the attention ops (shapes: M = batch rows or q
-    length, K = kv context length, N = H * hd)."""
-    if op == "attn.paged_decode":
+    """Heuristic tiles for the attention ops (shapes: M = batch rows, q
+    length or packed token rows, K = kv context length, N = H * hd)."""
+    if op in _PAGED_ATTN_OPS:
         ps = max(1, group_size)
         # small pages pay per-page gather overhead: cap the block at ~256
         # tokens so the XLA twin's page index stays narrow; larger pages
@@ -129,7 +135,7 @@ def attn_candidate_blocks(op: str, M: int, K: int, N: int,
     """Search space for the attention ops: kv-tokens-per-program x KV-head
     tiling (and q tiling for prefill)."""
     out, seen = [], set()
-    if op == "attn.paged_decode":
+    if op in _PAGED_ATTN_OPS:
         ps = max(1, group_size)
         bks = sorted({max(ps, min(_round_up(K, ps), ps * pp))
                       for pp in (1, 4, 8, 32, 128)})

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 
 from repro.observability.metrics import global_registry
 
-from . import autotune, packing, paged_attention, ref
+from . import autotune, packing, paged_attention, ragged_attention, ref
 from .int4_matmul import int4_matmul as _int4_matmul
 from .int4_matmul import int4_matmul_fused as _int4_matmul_fused
 from .lut_mul4 import lut_mul4 as _lut_mul4
@@ -224,6 +224,35 @@ def paged_decode_attention(q, k_pool, v_pool, tbl, last_pos,
             window=window, pp=pp)
     return paged_attention.paged_decode_attention(
         q, k_pool, v_pool, tbl, last_pos, k_scale, v_scale,
+        window=window, pp=pp, bkv=b["bn"], interpret=m == _INTERPRET)
+
+
+def ragged_paged_attention(q, k_pool, v_pool, tbl, token_slot, token_pos,
+                           k_scale=None, v_scale=None, *, window: int = 0,
+                           interpret: Optional[bool] = None, tag: str = ""):
+    """Ragged token-major attention over the KV page pool: one launch for a
+    flat ``[T, H, hd]`` pack of mixed prefill-chunk and decode rows.
+
+    q [T, H, hd]; pools [P, ps, KV, hd(/2)] (+ per-token scales when the
+    cache is int8/int4); tbl [max_batch, pages_per_seq]; token_slot /
+    token_pos [T] (-1 = padding row, masked to a zero output).  Tiles
+    resolve through ``kernels.autotune`` op ``attn.ragged`` with the same
+    entry semantics as ``attn.paged_decode``."""
+    m = _mode(interpret)
+    _count_dispatch("ragged_paged_attention", m)
+    T, H, hd = q.shape
+    ps = k_pool.shape[1]
+    max_ctx = tbl.shape[1] * ps
+    b = autotune.get_blocks("attn.ragged", T, max_ctx, H * hd,
+                            jnp.dtype(k_pool.dtype).name, group_size=ps,
+                            tag=tag)
+    pp = max(1, b["bk"] // ps)
+    if m == _XLA:
+        return ragged_attention.ragged_attention_xla(
+            q, k_pool, v_pool, tbl, token_slot, token_pos, k_scale, v_scale,
+            window=window, pp=pp)
+    return ragged_attention.ragged_decode_attention(
+        q, k_pool, v_pool, tbl, token_slot, token_pos, k_scale, v_scale,
         window=window, pp=pp, bkv=b["bn"], interpret=m == _INTERPRET)
 
 

@@ -1,0 +1,232 @@
+"""Ragged token-major paged attention: one launch for mixed prefill+decode.
+
+The bucketed serving step runs prefill and decode as separate jits over
+padded batch shapes, so a mixed step pays two launches plus the padding of
+both buckets, and every new bucket is a recompile.  This kernel is the
+serving-side version of the paper's dense-packing argument: pack every
+live request's tokens — chunked-prefill slices and single decode tokens
+alike — into one flat ``[total_tokens, ...]`` buffer (the MAX
+``flash_attention_ragged`` idiom) and attend them all in one grid.
+
+Each packed row carries two scalars:
+
+  ``token_slot[t]``  which request (block-table row) the token belongs to
+                     (-1 = padding row),
+  ``token_pos[t]``   its absolute position in that request's sequence
+                     (-1 = padding row).
+
+The engine writes the step's K/V through the block tables *before*
+attending (``kv_pages.ragged_paged_write``), so by the time this kernel
+runs the pool holds every position ``<= token_pos[t]`` for row ``t`` and
+the decode mask ``pos <= token_pos`` is exactly causal for prefill rows
+and exactly last-token for decode rows — one rule covers both.
+
+``ragged_decode_attention``
+    One program per (token row, KV-head tile); grid (T, nh, nj).  The
+    per-token slot/pos vectors and the whole block-table matrix ride in as
+    scalar-prefetch operands, so the BlockSpec index_map resolves
+    ``tbl[slot[t], logical_page]`` to a physical pool page per program —
+    the same in-place page walk as ``paged_decode_attention``, just
+    indexed per token instead of per batch row.
+
+``ragged_attention_xla``
+    The twin CPU/GPU hosts execute and the compare harness gates.  It
+    gathers each token's table row (padding rows get the out-of-bounds
+    sentinel page) and defers to ``paged_decode_attention_xla`` with
+    batch == tokens — so ragged decode rows are *bit-identical* to the
+    bucketed fused/gather decode paths by construction, and prefill rows
+    get the identical exact-softmax-over-pages math the tail-prefill
+    (prefill-over-cache) path runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .paged_attention import (
+    NEG_INF,
+    _dequant_slab,
+    _largest_divisor,
+    _round_scores,
+    paged_decode_attention_xla,
+)
+
+
+def _ragged_kernel(slot_ref, pos_ref, tbl_ref, q_ref, *refs, pp: int,
+                   ps: int, nj: int, G: int, bkv: int, hd: int, window: int,
+                   quant: bool, scale: float):
+    # slot_ref/tbl_ref are consumed by the BlockSpec index_maps; the body
+    # only needs the token's own position for masking.
+    del slot_ref, tbl_ref
+    k_refs = refs[:pp]
+    v_refs = refs[pp:2 * pp]
+    i = 2 * pp
+    if quant:
+        ks_refs = refs[i:i + pp]
+        vs_refs = refs[i + pp:i + 2 * pp]
+        i += 2 * pp
+    o_ref, acc_ref, m_ref, l_ref = refs[i:i + 4]
+
+    t, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    tp = pos_ref[t]
+    cd = q_ref.dtype
+    qh = q_ref[0].reshape(bkv, G, hd)              # [bkv, G, hd]
+
+    for u in range(pp):                            # static unroll: pages
+        kb = k_refs[u][0]                          # [ps, bkv, hd(/2)]
+        vb = v_refs[u][0]
+        if quant:
+            kb = _dequant_slab(kb, ks_refs[u][0], hd)
+            vb = _dequant_slab(vb, vs_refs[u][0], hd)
+        s = jax.lax.dot_general(
+            qh, kb.transpose(1, 0, 2).astype(cd),
+            (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        s = _round_scores(s, cd) * scale
+
+        logical = j * pp + u
+        pos = logical * ps + jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, ps), 2)
+        # pos <= token_pos is causal for prefill rows (the chunk's K/V is
+        # already in the pool) and last-token for decode rows; padding rows
+        # (token_pos == -1) mask everything and emit zeros.
+        mask = (pos <= tp) & (tp >= 0)
+        if window:
+            mask &= (tp - pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, vb.transpose(1, 0, 2).astype(jnp.float32),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)        # [bkv, G, hd]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _emit():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l > 0, l, 1.0)  # padding row -> 0
+        o_ref[...] = out.reshape(1, bkv * G, hd).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "pp", "bkv", "interpret"))
+def ragged_decode_attention(
+    q: jnp.ndarray,            # [T, H, hd] packed token rows
+    k_pool: jnp.ndarray,       # [P, ps, KV, hd]  (uint8: [..., hd//2])
+    v_pool: jnp.ndarray,
+    tbl: jnp.ndarray,          # [max_batch, pages_per_seq] int32
+    token_slot: jnp.ndarray,   # [T] int32 table row per token (-1 = pad)
+    token_pos: jnp.ndarray,    # [T] int32 absolute position (-1 = pad)
+    k_scale: jnp.ndarray = None,   # [P, ps, KV, 1] f32 when quantized
+    v_scale: jnp.ndarray = None,
+    window: int = 0,
+    pp: int = 4,               # pages per program (autotuned: attn.ragged)
+    bkv: int = 0,              # KV-head tile, 0 = all heads
+    interpret: bool = None,
+) -> jnp.ndarray:
+    T, H, hd = q.shape
+    P, ps, KV = k_pool.shape[:3]
+    maxB, pps = tbl.shape
+    G = H // KV
+    quant = k_scale is not None
+
+    bkv = _largest_divisor(KV, bkv if bkv > 0 else KV)
+    pp = max(1, min(pp, pps))
+    nj = -(-pps // pp)
+    nh = KV // bkv
+    interpret = (jax.default_backend() != "tpu"
+                 if interpret is None else interpret)
+
+    tbl = tbl.astype(jnp.int32)
+    token_slot = token_slot.astype(jnp.int32)
+    token_pos = token_pos.astype(jnp.int32)
+
+    def page_spec(u):
+        # two scalar hops per program: token row -> table row -> physical
+        # page.  Padding rows (slot -1) clamp to row 0 and dead table slots
+        # carry the out-of-bounds sentinel (== P); both clamp into bounds
+        # and mask away in the kernel body.
+        def index(t, h, j, slot_ref, pos_ref, tbl_ref):
+            row = jnp.maximum(slot_ref[t], 0)
+            logical = jnp.minimum(j * pp + u, pps - 1)
+            return (jnp.minimum(tbl_ref[row, logical], P - 1), 0, h, 0)
+        return index
+
+    kv_block = k_pool.shape[-1]                    # hd, or hd//2 packed
+    in_specs = [pl.BlockSpec((1, bkv * G, hd),
+                             lambda t, h, j, s, p_, tb: (t, h, 0))]
+    in_specs += [pl.BlockSpec((1, ps, bkv, kv_block), page_spec(u))
+                 for u in range(pp)]
+    in_specs += [pl.BlockSpec((1, ps, bkv, kv_block), page_spec(u))
+                 for u in range(pp)]
+    args = [q, *([k_pool] * pp), *([v_pool] * pp)]
+    if quant:
+        in_specs += [pl.BlockSpec((1, ps, bkv, 1), page_spec(u))
+                     for u in range(pp)]
+        in_specs += [pl.BlockSpec((1, ps, bkv, 1), page_spec(u))
+                     for u in range(pp)]
+        args += [*([k_scale] * pp), *([v_scale] * pp)]
+
+    kernel = functools.partial(
+        _ragged_kernel, pp=pp, ps=ps, nj=nj, G=G, bkv=bkv, hd=hd,
+        window=window, quant=quant, scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(T, nh, nj),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bkv * G, hd),
+                                   lambda t, h, j, s, p_, tb: (t, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bkv, G, hd), jnp.float32),
+                pltpu.VMEM((bkv, G, 1), jnp.float32),
+                pltpu.VMEM((bkv, G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, H, hd), q.dtype),
+        interpret=interpret,
+    )(token_slot, token_pos, tbl, *args)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("window", "pp"))
+def ragged_attention_xla(
+    q, k_pool, v_pool, tbl, token_slot, token_pos,
+    k_scale=None, v_scale=None, window: int = 0, pp: int = 4,
+) -> jnp.ndarray:
+    """Pure-XLA twin: gather each token's block-table row (padding rows
+    become all-sentinel rows, so their clamped page fetches mask to zero)
+    and run the exact-softmax blocked decode twin with batch == tokens.
+    Per-token rows are independent in that twin, so decode tokens here are
+    bit-identical to what the bucketed decode step produced for the same
+    (pool, table, position) — regardless of how many rows share a step."""
+    P = k_pool.shape[0]
+    maxB = tbl.shape[0]
+    slot = token_slot.astype(jnp.int32)
+    tbl_pt = jnp.where(
+        slot[:, None] >= 0,
+        jnp.take(tbl.astype(jnp.int32), jnp.clip(slot, 0, maxB - 1), axis=0),
+        P)                                          # [T, pages_per_seq]
+    return paged_decode_attention_xla(
+        q, k_pool, v_pool, tbl_pt, token_pos.astype(jnp.int32),
+        k_scale, v_scale, window=window, pp=pp)

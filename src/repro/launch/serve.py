@@ -8,9 +8,13 @@ three attention paths — contiguous KV, paged KV with the gather
 paged-attention kernel — and verifies the generated tokens are
 bit-identical across all three; with the prefix cache on it adds a fourth
 `paged_nocache` cold twin, proving cache-hit runs token-identical to cold
-runs.  `--scenario shared_prefix` swaps the traffic for a shared-system-
-prompt fleet (the prefix cache's target workload) and the report carries
-`prefix_hit_rate` / `tokens_prefilled_saved`.
+runs, and always a fifth `ragged` path: the token-major engine that packs
+mixed prefill chunks + decode tokens into one fused launch per step
+(`--step ragged` selects it for single-layout runs).  `--scenario
+shared_prefix` swaps the traffic for a shared-system-prompt fleet (the
+prefix cache's target workload) and the report carries `prefix_hit_rate` /
+`tokens_prefilled_saved`; `mixed` churns batch composition every step and
+`bursty` groups arrivals — the ragged step's stress workloads.
 
 Mixed precision: `--quant-plan <name|path|inline>` serves under any
 site-addressable QuantPlan (core.quant_plan).  `--quantized-ckpt` proves the
@@ -43,7 +47,13 @@ import numpy as np
 
 from repro.configs import Runtime, ServingConfig, get_config
 from repro.observability import Telemetry, global_registry
-from repro.serving.api import poisson_trace, run_trace, shared_prefix_trace
+from repro.serving.api import (
+    bursty_trace,
+    mixed_trace,
+    poisson_trace,
+    run_trace,
+    shared_prefix_trace,
+)
 from repro.serving.engine import InferenceEngine, build_params
 
 
@@ -108,7 +118,8 @@ def _quantized_ckpt_report(cfg, rt, ckpt_dir, seed):
 def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
           page_size=16, num_pages=48, max_ctx=128, requests=8, rate=0.5,
           prompt_lens=(8, 16, 32), gen_lens=(8, 16), scenario="poisson",
-          sys_len=32, prefix_cache=True,
+          sys_len=32, prefix_cache=True, step="bucketed", token_budget=0,
+          burst=4, period=8,
           quant_backend="w4a4_packed", quant_plan=None, cache_dtype="bfloat16",
           quantized_ckpt=False, ckpt_dir=None, sweep=False, seed=0,
           trace_out=None, metrics=True):
@@ -118,7 +129,13 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
     if layout is None:   # paged needs a pure-attention stack (SSM doesn't page)
         blocks = tuple(cfg.pattern) + tuple(cfg.tail)
         layout = "paged" if all(bt == "A" for bt in blocks) else "contiguous"
-    rt = Runtime(scan_layers=True, attn_impl="flash",
+    # perf runs prefill through the flash kernel; the compare harness uses
+    # exact-softmax prefill ("chunked") so the token-identity assertion
+    # compares identical math — flash's online-softmax rescaling rounds
+    # differently from the ragged step's page-grouped exact softmax, and on
+    # a random-init model that can flip an argmax tie in the prompt logits
+    rt = Runtime(scan_layers=True,
+                 attn_impl="chunked" if layout == "compare" else "flash",
                  attn_chunk_q=min(512, max_ctx), loss_chunk=0,
                  quant_backend=None if quant_plan else quant_backend,
                  quant_plan=quant_plan, cache_dtype=cache_dtype,
@@ -131,6 +148,16 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
         # mid-window jit compile
         warm_lens = tuple(prompt_lens) + tuple(sys_len + p
                                                for p in prompt_lens)
+    elif scenario == "mixed":
+        # one arrival per step, lengths cycling: batch composition changes
+        # every step — the ragged step's target workload
+        trace = mixed_trace(requests, prompt_lens, gen_lens, cfg.vocab,
+                            seed=seed)
+        warm_lens = tuple(prompt_lens)
+    elif scenario == "bursty":
+        trace = bursty_trace(requests, burst, period, prompt_lens, gen_lens,
+                             cfg.vocab, seed=seed)
+        warm_lens = tuple(prompt_lens)
     else:
         trace = poisson_trace(requests, rate, prompt_lens, gen_lens,
                               cfg.vocab, seed=seed)
@@ -141,8 +168,11 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
     # cold twin: the same fused path with prefix_cache=off, which must be
     # token-identical to the cache-hit runs (contiguous is a second cold
     # reference — it never prefix-caches).
+    # compare mode always includes the ragged token-major engine as a fifth
+    # path: same trace, same paged pool, one fused launch per step — its
+    # tokens must match every bucketed path
     layouts = (["paged", "paged_gather", "contiguous"]
-               + (["paged_nocache"] if prefix_cache else [])
+               + (["paged_nocache"] if prefix_cache else []) + ["ragged"]
                if layout == "compare" else [layout])
 
     report = {"arch": arch, "reduced": reduced,
@@ -171,9 +201,13 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
         kv_layout = "contiguous" if lay == "contiguous" else "paged"
         rt_lay = (dataclasses.replace(rt, paged_attn="gather")
                   if lay == "paged_gather" else rt)
+        step_mode = ("ragged" if lay == "ragged"
+                     else step if layout != "compare"
+                     and kv_layout == "paged" else "bucketed")
         sv = ServingConfig(layout=kv_layout, max_batch=max_batch,
                            page_size=page_size, num_pages=num_pages,
-                           max_ctx=max_ctx,
+                           max_ctx=max_ctx, step=step_mode,
+                           token_budget=token_budget,
                            prefix_cache=(prefix_cache
                                          and lay != "paged_nocache"))
         # per-engine telemetry (compare-mode engines keep separate
@@ -219,16 +253,21 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
             # prefill) attends dequantized state where the cold path attends
             # full precision, so argmax can legitimately diverge
             # (EXPERIMENTS.md §Serving / §Prefix caching)
+            diverged = [lay for lay in layouts[1:]
+                        if tokens_by_layout[lay] != ref_tokens]
             lossy_paths = (report["paged"]["requests_preempted"] > 0
-                           or report["paged"]["tokens_prefilled_saved"] > 0)
+                           or report["paged"]["tokens_prefilled_saved"] > 0
+                           # ragged chunked prefill always attends the
+                           # (dequantized) page pool, where bucketed fresh
+                           # prefill attends in-flight full-precision K/V
+                           or "ragged" in diverged)
             if cache_dtype in ("int8", "int4") and lossy_paths:
-                report["note"] = ("paged diverged after preemption or a "
-                                  "prefix-cache hit with a lossy KV-cache "
-                                  "dtype: recomputed/cold prefixes attend in "
-                                  "full precision — expected")
+                report["note"] = ("paged/ragged diverged after preemption, a "
+                                  "prefix-cache hit, or a chunked prefill "
+                                  "with a lossy KV-cache dtype: the other "
+                                  "path attends those prefixes in full "
+                                  "precision — expected")
             else:
-                diverged = [lay for lay in layouts[1:]
-                            if tokens_by_layout[lay] != ref_tokens]
                 raise SystemExit(
                     f"FAIL: decode diverged across attention paths "
                     f"({layouts[0]} vs {diverged})")
@@ -239,10 +278,19 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
     report["latency_p95_s"] = primary["latency_p95_s"]
     report["prefix_hit_rate"] = primary.get("prefix_hit_rate", 0.0)
     report["tokens_prefilled_saved"] = primary.get("tokens_prefilled_saved", 0)
+    report["padding_tokens_wasted"] = primary.get("padding_tokens_wasted", 0)
+    report["token_utilization"] = primary.get("token_utilization")
     # telemetry headlines: steady-state recompiles (should be 0 — see
-    # observability.jit_watch) and the process-wide kernel dispatch mix
-    report["recompiles_steady_state"] = (
-        primary.get("recompiles", {}).get("steady_state", 0))
+    # observability.jit_watch) and the process-wide kernel dispatch mix.
+    # Compare mode takes the MAX over every engine, so a single path
+    # recompiling mid-window fails the zero-steady-state gate.
+    if layout == "compare":
+        report["recompiles_steady_state"] = max(
+            report[lay].get("recompiles", {}).get("steady_state", 0)
+            for lay in layouts)
+    else:
+        report["recompiles_steady_state"] = (
+            primary.get("recompiles", {}).get("steady_state", 0))
     report["kernel_dispatch"] = (
         global_registry().snapshot()["counters"])
     return report
@@ -270,12 +318,28 @@ def main():
     ap.add_argument("--prompt-lens", default="8,16,32")
     ap.add_argument("--gen-lens", default="8,16")
     ap.add_argument("--scenario", default="poisson",
-                    choices=["poisson", "shared_prefix"],
+                    choices=["poisson", "shared_prefix", "mixed", "bursty"],
                     help="shared_prefix: every prompt = one shared system "
                          "prefix (--sys-len) + a unique user suffix drawn "
-                         "from --prompt-lens")
+                         "from --prompt-lens; mixed: one arrival per step "
+                         "with cycling lengths (batch composition changes "
+                         "every step); bursty: --burst arrivals every "
+                         "--period steps")
     ap.add_argument("--sys-len", type=int, default=32,
                     help="shared system-prompt length (shared_prefix)")
+    ap.add_argument("--step", default="bucketed",
+                    choices=["bucketed", "ragged"],
+                    help="serving step: classic bucketed prefill/decode "
+                         "jits, or the ragged token-major single launch "
+                         "(paged layout; compare mode always adds a ragged "
+                         "path)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="ragged step's padded token capacity per step "
+                         "(0 = auto from max_batch/page_size)")
+    ap.add_argument("--burst", type=int, default=4,
+                    help="arrivals per burst (bursty scenario)")
+    ap.add_argument("--period", type=int, default=8,
+                    help="steps between bursts (bursty scenario)")
     ap.add_argument("--prefix-cache", default="on", choices=["on", "off"],
                     help="shared-prefix KV page reuse (paged layout); "
                          "compare mode adds a paged_nocache cold twin "
@@ -316,6 +380,8 @@ def main():
         gen_lens=tuple(int(x) for x in args.gen_lens.split(",")),
         scenario=args.scenario, sys_len=args.sys_len,
         prefix_cache=args.prefix_cache == "on",
+        step=args.step, token_budget=args.token_budget,
+        burst=args.burst, period=args.period,
         quant_backend=args.quant, quant_plan=args.quant_plan,
         cache_dtype=args.cache_dtype,
         quantized_ckpt=args.quantized_ckpt, ckpt_dir=args.ckpt_dir,

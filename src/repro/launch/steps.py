@@ -21,6 +21,7 @@ from repro.distributed.sharding import (
     specs_to_shardings,
 )
 from repro.models import decode_step, init_caches, init_model, lm_loss
+from repro.models.transformer import _logits, forward
 from repro.models.transformer import prefill as prefill_fn
 from repro.optim import adamw_init, adamw_update, warmup_cosine
 
@@ -134,6 +135,39 @@ def make_serving_steps(cfg: ArchConfig, rt: Runtime, paged: bool = False):
     return (jax.jit(prefill_step, donate_argnums=(2,)),
             None,
             jax.jit(dec_step, donate_argnums=(2,)))
+
+
+def make_ragged_step(cfg: ArchConfig, rt: Runtime):
+    """One jit'd step for the ragged token-major engine: a flat [1, T] pack
+    of mixed prefill-chunk and decode tokens, routed per row through
+    ``slots`` (which block-table row each token belongs to, -1 = padding).
+
+    The signature depends only on the padded token budget T (and the fixed
+    max_batch/pages_per_seq of the table pool) — never on how many requests
+    are prefilling vs decoding — so once the budget's shape is warm,
+    steady-state recompiles are zero *by construction*, not by bucketing.
+
+    ``emit_rows`` [max_batch] names, per slot, the packed row whose logits
+    produce that request's next token (-1 = no emission this step: the
+    request's prefill still has chunks to go, or the slot is empty); the
+    lm head runs only on those max_batch gathered rows, and greedy argmax
+    stays inside the jit like the bucketed steps."""
+    from repro.serving.kv_pages import with_token_slots
+
+    vocab = cfg.vocab
+
+    def ragged_step(params, tokens, caches, positions, tbl_all, slots,
+                    emit_rows):
+        caches = with_token_slots(caches, tbl_all, slots)
+        hidden, caches, _ = forward(params, tokens, cfg, rt, positions,
+                                    caches, update_cache=True,
+                                    return_hidden=True)
+        h = jnp.take(hidden, jnp.clip(emit_rows, 0, None), axis=1)  # [1,mb,D]
+        logits = _logits(params, h, cfg, rt)[0]                     # [mb, V]
+        nxt = jnp.argmax(logits[:, :vocab], axis=-1).astype(jnp.int32)
+        return jnp.where(emit_rows >= 0, nxt, -1), caches
+
+    return jax.jit(ragged_step, donate_argnums=(2,))
 
 
 # ------------------------------------------------------------ input specs --

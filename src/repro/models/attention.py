@@ -304,7 +304,25 @@ def apply_attention(
         k = apply_mrope(k, mp, cfg.rope_theta, cfg.mrope_sections)
 
     new_cache = None
-    if cache is not None and "tbl" in cache:
+    if cache is not None and "slots" in cache:
+        # ---- ragged token-major step: B == 1, S == packed token rows ------
+        # Every row (prefill-chunk slice or decode token) routes through the
+        # block-table row cache["slots"] names.  Write-then-attend makes one
+        # mask rule exact for both: the chunk's K/V lands in the pool first,
+        # so pos <= token_pos is causal for prefill rows and last-token for
+        # decode rows (see kernels.ragged_attention).
+        from repro.kernels import ops
+        from repro.serving.kv_pages import ragged_paged_write
+
+        new_cache = ragged_paged_write(cache, k, v, tpos)
+        out = ops.ragged_paged_attention(
+            q[0], new_cache["k"], new_cache["v"], new_cache["tbl"],
+            cache["slots"], tpos[0],
+            new_cache.get("k_scale"), new_cache.get("v_scale"),
+            window=cfg.local_window,
+            tag=join_site(site, "attn.ragged"),
+        )[None]
+    elif cache is not None and "tbl" in cache:
         # ---- paged KV (serving): pool + block table, see serving/kv_pages --
         from repro.serving.kv_pages import paged_read, paged_write
 

@@ -112,6 +112,54 @@ def shared_prefix_trace(
     return out
 
 
+def mixed_trace(
+    n_requests: int,
+    prompt_lens: Sequence[int],
+    gen_lens: Sequence[int],
+    vocab: int,
+    seed: int = 0,
+) -> List[TraceItem]:
+    """Batch-composition churn: exactly one arrival per decode step with
+    prompt/gen lengths cycling through the cross product, so every step's
+    running set mixes prefill chunks and decode tokens differently — the
+    workload the ragged token-major step exists for (a bucketed engine
+    re-pads every step; the ragged engine reuses one compiled shape)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        L = int(prompt_lens[i % len(prompt_lens)])
+        g = int(gen_lens[(i // len(prompt_lens)) % len(gen_lens)])
+        prompt = rng.integers(0, vocab, size=L, dtype=np.int32)
+        out.append(TraceItem(arrival_step=i, prompt=prompt, max_new=g))
+    return out
+
+
+def bursty_trace(
+    n_requests: int,
+    burst: int,
+    period: int,
+    prompt_lens: Sequence[int],
+    gen_lens: Sequence[int],
+    vocab: int,
+    seed: int = 0,
+) -> List[TraceItem]:
+    """Bursty arrivals: groups of `burst` simultaneous requests every
+    `period` decode steps (idle gaps between), alternating long-prompt and
+    short-prompt bursts.  Stresses admission spikes — the bucketed engine
+    pays one prefill launch per admission, the ragged engine drains the
+    whole burst through its token budget."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        group = i // burst
+        L = int(prompt_lens[(group + i) % len(prompt_lens)])
+        g = int(gen_lens[i % len(gen_lens)])
+        prompt = rng.integers(0, vocab, size=L, dtype=np.int32)
+        out.append(TraceItem(arrival_step=group * period, prompt=prompt,
+                             max_new=g))
+    return out
+
+
 def run_trace(engine: InferenceEngine, trace: List[TraceItem],
               max_steps: int = 100_000) -> Tuple[Dict, List[Request]]:
     """Drive a trace to completion: submit each request at its arrival step,

@@ -50,7 +50,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, Runtime, ServingConfig
 from repro.core.quant_plan import pack_for_serving
 from repro.kernels import autotune
-from repro.launch.steps import make_serving_steps
+from repro.launch.steps import make_ragged_step, make_serving_steps
 from repro.observability import COUNT_BUCKETS, Telemetry
 from repro.models import init_caches, init_model
 from repro.serving.kv_pages import (
@@ -60,6 +60,7 @@ from repro.serving.kv_pages import (
     init_paged_caches,
     scatter_rows,
     with_block_tables,
+    with_token_slots,
 )
 from repro.serving.scheduler import Request, Scheduler
 
@@ -153,6 +154,20 @@ class InferenceEngine:
         self.tm.jit_watch.register("prefill_tail", self._prefill_tail)
         self.tm.jit_watch.register("decode", self._decode)
 
+        # ragged token-major step: ONE jit whose signature depends only on
+        # the padded token budget — batch composition (how many rows are
+        # prefill chunks vs decode tokens) never recompiles
+        self._ragged = None
+        if sv.step == "ragged":
+            self._ragged = make_ragged_step(cfg, rt)
+            self._budget = sv.budget
+            self._slots0 = np.zeros((0,), np.int32)
+            # bind zero-length routing leaves now so the cache pytree
+            # structure (tbl + slots) is identical on every ragged call
+            self.caches = with_token_slots(self.caches, self._tbl0,
+                                           self._slots0)
+            self.tm.jit_watch.register("ragged", self._ragged)
+
         self._next_rid = 0
         self._finished: List[Request] = []
         self._all: Dict[int, Request] = {}
@@ -161,6 +176,12 @@ class InferenceEngine:
         self.n_decode_tokens = 0
         self.n_prefill_tokens = 0        # tokens actually pushed through prefill
         self.n_prefix_hit_tokens = 0     # prompt/resume tokens served from cache
+        # padded-capacity accounting (both step modes): packed = useful rows
+        # computed, wasted = padding rows computed and discarded
+        self.n_tokens_packed = 0
+        self.n_tokens_wasted = 0
+        self._last_packed = 0
+        self._last_wasted = 0
         self.t_start = None
         self._profile: Optional[Dict] = None
         self._profile_step: Optional[int] = None
@@ -192,7 +213,13 @@ class InferenceEngine:
         latency/throughput stats don't absorb multi-second jit compiles.
         Dummy calls use position -1 everywhere: every cache write is dropped
         and pool/cache state is untouched.  Resumed prefixes can still hit a
-        new prompt bucket mid-run; that compile is attributed to the run."""
+        new prompt bucket mid-run; that compile is attributed to the run.
+
+        Ragged mode has exactly ONE signature — the token budget — so
+        warmup is one dummy call regardless of the trace's prompt mix."""
+        if self._ragged is not None:
+            self._warm_ragged()
+            return
         for L in sorted({self._prompt_pad(len_) for len_ in prompt_lens}):
             tokens = jnp.zeros((1, L), jnp.int32)
             positions = jnp.full((1, L), -1, jnp.int32)
@@ -229,9 +256,39 @@ class InferenceEngine:
                 self._decode(self.params, tok, sub, pos)
             self._poll_jit("decode", (nb, 1))
 
+    def _warm_ragged(self) -> None:
+        """Compile the single ragged signature at the current budget.  All
+        positions/slots are -1 (pure padding): writes drop, pool untouched."""
+        T = self._budget
+        _, self.caches = self._ragged(
+            self.params, jnp.zeros((1, T), jnp.int32), self.caches,
+            jnp.full((1, T), -1, jnp.int32), self._tbl,
+            jnp.full((T,), -1, jnp.int32),
+            jnp.full((self.sv.max_batch,), -1, jnp.int32))
+        self._strip_tables()
+        self._poll_jit("ragged", (1, T))
+
+    def _grow_budget(self, need: int) -> None:
+        """The running set's decode tokens alone exceed the budget (only
+        possible with an explicit tiny token_budget): double to fit, compile
+        the new signature, and re-baseline the sentinel.  The growth lands
+        in the `compiles` count — never in steady_state, which stays the
+        zero-recompiles guarantee the ragged mode exists for."""
+        new = self._budget
+        while new < need:
+            new *= 2
+        self._budget = new
+        self.metrics.counter(
+            "ragged_budget_grows_total",
+            "token-budget doublings (one fresh compile each)").inc()
+        self._warm_ragged()
+        self.tm.jit_watch.absorb("ragged")
+
     def step(self) -> int:
         """One decode-step boundary; returns the number of running requests
         after the step (0 = idle)."""
+        if self._ragged is not None:
+            return self._step_ragged()
         t0 = time.perf_counter()
         tt0 = self.trace.now()
         now = self.clock()
@@ -258,6 +315,121 @@ class InferenceEngine:
         self._observe_step(t0, tt0, admitted, n_tail, batch)
         return len(self.scheduler.running)
 
+    def _step_ragged(self) -> int:
+        """One ragged token-major step: admit, plan a token budget's worth of
+        work (decode tokens first, then prefill chunks), run ONE jit over the
+        flat pack, apply emissions.  Unlike the bucketed path there is no
+        per-admission prefill call — an admitted request's prefix simply
+        drains through the planner as chunks, possibly across several steps,
+        interleaved with everyone else's decode tokens."""
+        t0 = time.perf_counter()
+        tt0 = self.trace.now()
+        now = self.clock()
+        if self.t_start is None:
+            self.t_start = now
+        admitted = self.scheduler.admit(now)
+        n_tail = sum(1 for r in admitted if r.n_cached)
+        for req in admitted:
+            # prefix-cache hits are realized at admission (the planner only
+            # ever feeds prefix[n_cached:]) — account them here, where the
+            # bucketed path accounts them inside _prefill_request
+            hit = req.n_cached
+            self.n_prefix_hit_tokens += hit
+            self.metrics.counter(
+                "prefix_hit_tokens_total",
+                "prompt/resume tokens served from cached pages").inc(hit)
+            self._seg.setdefault(req.rid, (self.trace.now(), req.slot))
+        for req in self.scheduler.ensure_decode():
+            seg = self._seg.pop(req.rid, None)
+            if seg is not None:
+                self.trace.complete(f"r{req.rid}", 1 + seg[1], seg[0],
+                                    rid=req.rid, outcome="preempted",
+                                    gen=len(req.tokens))
+        # the budget must cover every decode token plus one prefill-chunk
+        # slot whenever a prefill-phase request is running — a saturated
+        # decode set would otherwise starve later slots indefinitely (the
+        # planner serves decode tokens in slot order, so the same requests
+        # win every step).  Only reachable with an explicit token_budget
+        # below max_batch: grow, compile the new signature once, and
+        # re-baseline the sentinel so steady_state stays zero.
+        running = self.scheduler.running.values()
+        n_decoding = sum(1 for r in running if r.decoding)
+        need = n_decoding + (1 if any(not r.decoding for r in running) else 0)
+        if need > self._budget:
+            self._grow_budget(need)
+        plan = self.scheduler.plan_tokens(self._budget)
+        if plan:
+            self._ragged_exec(plan)
+        self.n_steps += 1
+        self._retire()
+        self._observe_step(t0, tt0, admitted, n_tail,
+                           [r for r, _, _ in plan if r.decoding])
+        return len(self.scheduler.running)
+
+    def _ragged_exec(self, plan) -> None:
+        """Pack the planned (req, start, n) chunks into the flat [1, T]
+        buffers and run the ragged step.  Every row's KV is written through
+        its block table *before* attention (write-then-attend), so one mask
+        rule — key position <= query position — is exactly causal for
+        prefill chunks and exactly last-token for decode rows."""
+        T = self._budget
+        mb = self.sv.max_batch
+        tokens = np.zeros((1, T), np.int32)
+        positions = np.full((1, T), -1, np.int32)   # -1 = pad: writes drop
+        slots = np.full((T,), -1, np.int32)
+        emit_rows = np.full((mb,), -1, np.int32)
+        used = 0
+        for req, start, n in plan:
+            tokens[0, used:used + n] = req.prefix[start:start + n]
+            positions[0, used:used + n] = np.arange(start, start + n)
+            slots[used:used + n] = req.slot
+            if start + n == len(req.prefix):
+                # chunk reaches the prefix end: this row's logits emit the
+                # request's next token (for decode rows, n == 1, always)
+                emit_rows[req.slot] = used + n - 1
+            used += n
+        self._observe_packing(used, T)
+        self._sync_tables([r for r, _, _ in plan])
+        tp0 = self.trace.now()
+        nxt, self.caches = self._ragged(
+            self.params, jnp.asarray(tokens), self.caches,
+            jnp.asarray(positions), self._tbl, jnp.asarray(slots),
+            jnp.asarray(emit_rows))
+        self._strip_tables()
+        self._poll_jit("ragged", (1, T))
+        nxt = np.asarray(nxt)
+        ps = self.sv.page_size
+        for req, start, n in plan:
+            end = start + n
+            if req.decoding:
+                self.n_decode_tokens += 1
+                self.metrics.counter(
+                    "decode_tokens_total",
+                    "tokens emitted by decode steps").inc()
+            else:
+                self.n_prefill_tokens += n
+                self.metrics.counter(
+                    "prefill_tokens_total",
+                    "tokens pushed through prefill").inc(n)
+                if self.trace.enabled:
+                    self.trace.complete("chunk_prefill", 1 + req.slot, tp0,
+                                        rid=req.rid, tokens=n, start=start)
+            req.n_cached = end
+            if emit_rows[req.slot] >= 0:
+                if not req.decoding:
+                    # prefill just completed: register its full pages before
+                    # the emitted token joins the prefix (mirrors the
+                    # bucketed engine's post-prefill registration)
+                    self.kv.register_upto(req.rid, req.prefix, end)
+                req.tokens.append(int(nxt[req.slot]))
+                if req.t_first is None:
+                    req.t_first = self.clock()
+                req.decoding = True
+                if end % ps == 0 and len(req.tokens) > 1:
+                    # a generated-token page just filled (decode rows only —
+                    # end counts the token written this step)
+                    self.kv.register_upto(req.rid, req.prefix, end)
+
     def _observe_step(self, t0: float, tt0: float, admitted: List[Request],
                       n_tail: int, batch: List[Request]) -> None:
         """Per-step telemetry: wall time + batch composition into the
@@ -277,6 +449,17 @@ class InferenceEngine:
         m.gauge("running_requests",
                 "requests in the decode batch").set(
                     len(self.scheduler.running))
+        # token utilization of this step's padded capacity (both step
+        # modes): useful rows over useful+padding rows computed since the
+        # previous boundary
+        du = self.n_tokens_packed - self._last_packed
+        dw = self.n_tokens_wasted - self._last_wasted
+        self._last_packed = self.n_tokens_packed
+        self._last_wasted = self.n_tokens_wasted
+        if du + dw:
+            m.gauge("token_utilization",
+                    "useful fraction of the step's padded token capacity"
+                    ).set(du / (du + dw))
         if self.sv.layout == "paged":
             m.gauge("kv_pool_in_use_pages",
                     "pages held by running requests").set(self.kv.in_use)
@@ -337,6 +520,18 @@ class InferenceEngine:
         raise RuntimeError(f"not idle after {max_steps} steps")
 
     # -------------------------------------------------------- internals --
+    def _observe_packing(self, used: int, capacity: int) -> None:
+        """Account one padded launch: `used` useful token rows out of
+        `capacity` computed.  The delta feeds the per-step
+        ``token_utilization`` gauge; the counter is the cumulative padding
+        bill a budget/bucket tuning pass wants to shrink."""
+        wasted = max(capacity - used, 0)
+        self.n_tokens_packed += used
+        self.n_tokens_wasted += wasted
+        self.metrics.counter(
+            "padding_tokens_wasted_total",
+            "padding token rows computed and discarded").inc(wasted)
+
     def _poll_jit(self, name: str, shape) -> None:
         """Poll the recompile sentinel right after a step-function call,
         attributing any jit cache growth to `shape` (the bucket signature
@@ -350,8 +545,14 @@ class InferenceEngine:
 
     def _strip_tables(self) -> None:
         """Rebind the batch-0 table template after a paged step so the
-        stored cache tree's signature never depends on the last bucket."""
-        self.caches = with_block_tables(self.caches, self._tbl0)
+        stored cache tree's signature never depends on the last bucket.
+        Ragged mode also carries zero-length token-slot leaves — strip both
+        so every ragged call sees the identical cache pytree."""
+        if self._ragged is not None:
+            self.caches = with_token_slots(self.caches, self._tbl0,
+                                           self._slots0)
+        else:
+            self.caches = with_block_tables(self.caches, self._tbl0)
 
     def _sync_tables(self, batch: List[Request]) -> None:
         """Upload block-table rows whose page allocation changed since the
@@ -434,6 +635,7 @@ class InferenceEngine:
                       "prefill tokens behind a prefix-cache hit").inc(n)
         m.counter("prefix_hit_tokens_total",
                   "prompt/resume tokens served from cached pages").inc(hit)
+        self._observe_packing(n, Lb)
         self.kv.register_upto(req.rid, prefix, L)   # index newly-full pages
         req.tokens.append(int(tok[0]))
         if req.t_first is None:
@@ -470,6 +672,7 @@ class InferenceEngine:
             self.caches = scatter_rows(
                 self.caches, gather_rows(sub, np.arange(n)), rows[:n])
         self._poll_jit("decode", (nb, 1))
+        self._observe_packing(n, nb)
         self.metrics.counter("decode_tokens_total",
                              "tokens emitted by decode steps").inc(n)
         nxt = np.asarray(nxt)
@@ -511,7 +714,22 @@ class InferenceEngine:
         q = jnp.asarray(rng.standard_normal((nb, cfg.n_heads, cfg.hd)),
                         jnp.bfloat16)
 
-        if sv.layout == "paged":
+        if self._ragged is not None:
+            # ragged mode: the step IS the ragged jit — time it at the
+            # budget, all-padding rows (writes drop, pool untouched)
+            T = self._budget
+            rtok = jnp.zeros((1, T), jnp.int32)
+            rpos = jnp.full((1, T), -1, jnp.int32)
+            rslots = jnp.full((T,), -1, jnp.int32)
+            remit = jnp.full((nb,), -1, jnp.int32)
+
+            def step():
+                nxt, self.caches = self._ragged(
+                    self.params, rtok, self.caches, rpos, self._tbl,
+                    rslots, remit)
+                self._strip_tables()
+                return nxt
+        elif sv.layout == "paged":
             def step():
                 nxt, self.caches = self._decode(
                     self.params, tok, self.caches, pos, self._tbl,
@@ -553,7 +771,20 @@ class InferenceEngine:
             from repro.serving.kv_pages import paged_read
 
             tbl = self._tbl[:nb]
-            if self.rt.paged_attn == "fused":
+            if self._ragged is not None:
+                T = self._budget
+                qT = jnp.asarray(
+                    rng.standard_normal((T, cfg.n_heads, cfg.hd)),
+                    jnp.bfloat16)
+                tslots = jnp.zeros((T,), jnp.int32)
+                tpos = jnp.full((T,), sv.max_ctx - 1, jnp.int32)
+
+                def attn_op():
+                    return ops.ragged_paged_attention(
+                        qT, attn["k"], attn["v"], self._tbl, tslots, tpos,
+                        attn.get("k_scale"), attn.get("v_scale"),
+                        window=cfg.local_window)
+            elif self.rt.paged_attn == "fused":
                 def attn_op():
                     return ops.paged_decode_attention(
                         q, attn["k"], attn["v"], tbl, last,
@@ -615,8 +846,15 @@ class InferenceEngine:
         pct = (lambda xs, q: float(np.percentile(xs, q)) if xs else None)
         mean = (lambda xs: float(np.mean(xs)) if xs else None)
         demand = self.n_prefill_tokens + self.n_prefix_hit_tokens
+        capacity = self.n_tokens_packed + self.n_tokens_wasted
         return {
             "layout": self.sv.layout,
+            "step_mode": self.sv.step,
+            **({"token_budget": self._budget}
+               if self._ragged is not None else {}),
+            "padding_tokens_wasted": self.n_tokens_wasted,
+            "token_utilization": (self.n_tokens_packed / capacity
+                                  if capacity else None),
             "requests_finished": len(done),
             "requests_preempted": self.scheduler.n_preemptions,
             "steps": self.n_steps,

@@ -145,6 +145,40 @@ def paged_write(cache: Dict, k, v, abs_pos) -> Dict:
     return out
 
 
+def ragged_paged_write(cache: Dict, k, v, abs_pos) -> Dict:
+    """Token-major twin of ``paged_write``: k/v [1, T, KV, hd] packed rows,
+    each routed through the table row its token belongs to
+    (``cache["slots"]`` [T], bound by ``with_token_slots``) at absolute
+    position ``abs_pos`` [1, T].  Padding rows (slot or position -1) go to
+    the out-of-bounds page and are dropped.  Quantization is per token —
+    the identical ``quantize_kv`` math to the bucketed writes, so a pool
+    filled by chunked ragged steps is bit-identical to one filled by
+    bucketed prefill + decode."""
+    P, ps = cache["k"].shape[:2]
+    tbl, slots = cache["tbl"], cache["slots"]       # [max_batch, pps], [T]
+    pos = abs_pos.reshape(-1)                       # [T]
+    logical = jnp.clip(pos // ps, 0, tbl.shape[1] - 1)
+    phys = tbl[jnp.clip(slots, 0, tbl.shape[0] - 1), logical]
+    page = jnp.where((pos >= 0) & (slots >= 0), phys, P)   # P => dropped
+    slot_in_page = pos % ps
+
+    def write(pool, val):
+        return pool.at[page, slot_in_page].set(val.astype(pool.dtype),
+                                               mode="drop")
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        int4 = cache["k"].dtype == jnp.uint8
+        for name, val in (("k", k), ("v", v)):
+            q, scale = quantize_kv(val, int4)
+            out[name] = write(cache[name], q[0])
+            out[name + "_scale"] = write(cache[name + "_scale"], scale[0])
+    else:
+        out["k"] = write(cache["k"], k[0])
+        out["v"] = write(cache["v"], v[0])
+    return out
+
+
 def paged_read(cache: Dict, last_pos):
     """Gather each row's pages back into the contiguous [B, max_ctx, KV, hd]
     layout.  last_pos [B] is the newest valid absolute position per row (-1 =
@@ -194,6 +228,36 @@ def with_block_tables(caches: Dict, tbl) -> Dict:
                 out[key] = (jnp.broadcast_to(tbl[None],
                                              (val.shape[0],) + tbl.shape)
                             if stacked else tbl)
+            else:
+                out[key] = val
+        return out
+
+    return {"rep": walk(caches["rep"], True),
+            "tail": walk(caches["tail"], False)}
+
+
+def with_token_slots(caches: Dict, tbl, slots) -> Dict:
+    """Bind the ragged step's routing scalars into every attention cache:
+    the *whole* block-table matrix `tbl` [max_batch, pages_per_seq] plus a
+    per-token table-row vector `slots` [T] (-1 = padding row).  Presence of
+    the "slots" leaf is what switches ``models.attention.apply_attention``
+    onto the ragged token-major path."""
+    tbl = jnp.asarray(tbl, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+
+    def walk(node, stacked):
+        out = {}
+        for key, val in node.items():
+            if isinstance(val, dict):
+                out[key] = walk(val, stacked)
+            elif key == "tbl":
+                reps = (val.shape[0],) if stacked else ()
+                out[key] = jnp.broadcast_to(tbl[None] if stacked else tbl,
+                                            reps + tbl.shape)
+                out["slots"] = jnp.broadcast_to(
+                    slots[None] if stacked else slots, reps + slots.shape)
+            elif key == "slots":
+                continue                            # rebound alongside tbl
             else:
                 out[key] = val
         return out

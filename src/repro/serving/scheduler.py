@@ -47,6 +47,9 @@ class Request:
     slot: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)  # generated
     n_cached: int = 0                   # tokens written to the KV cache
+    decoding: bool = False              # emitted since (re-)admission: the
+                                        # ragged planner feeds exactly one
+                                        # token/step once this flips
     n_preempts: int = 0
     admit_seq: int = -1                 # admission order (preemption victim key)
     t_visible: Optional[float] = None
@@ -123,6 +126,7 @@ class Scheduler:
                 break
             self.waiting.popleft()
             req.n_cached = hit
+            req.decoding = False
             req.slot = heapq.heappop(self._free_slots)
             req.state = RUNNING
             req.t_admit = now
@@ -150,6 +154,7 @@ class Scheduler:
         # hit length instead of re-prefilling the whole prefix.  Zero here
         # only states "nothing owned while waiting".
         victim.n_cached = 0
+        victim.decoding = False
         victim.n_preempts += 1
         self.n_preemptions += 1
         self.metrics.counter("sched_preemptions_total",
@@ -186,6 +191,34 @@ class Scheduler:
     def batch(self) -> List[Request]:
         """The decode batch: running requests in slot order."""
         return sorted(self.running.values(), key=lambda r: r.slot)
+
+    def plan_tokens(self, budget: int) -> List:
+        """Token-budget plan for one ragged step: ``[(req, start, n)]``
+        where the step feeds ``req.prefix[start:start+n]`` at positions
+        ``start..start+n-1``.
+
+        Decode tokens come first — every request that has emitted since
+        admission gets its single newest token (in slot order, matching
+        ``batch()``) — then prefill-phase requests chunk their remaining
+        prefix into whatever budget is left, oldest admission first (FIFO,
+        like the bucketed engine prefills admissions in arrival order).  A
+        prefill that gets no budget this step simply waits; determinism
+        holds because the plan depends only on (running set, n_cached),
+        both replayed identically across engines."""
+        plan, used = [], 0
+        for req in self.batch():
+            if req.decoding and used < budget:
+                plan.append((req, req.n_cached, 1))
+                used += 1
+        for req in sorted((r for r in self.running.values() if not r.decoding),
+                          key=lambda r: r.admit_seq):
+            if used >= budget:
+                break
+            n = min(len(req.prefix) - req.n_cached, budget - used)
+            if n > 0:
+                plan.append((req, req.n_cached, n))
+                used += n
+        return plan
 
     @property
     def idle(self) -> bool:
