@@ -178,9 +178,14 @@ def _maybe_tune(do_tune: bool, on_tpu: bool):
             ("w4a16_matmul", "bfloat16", 128, lambda b:
                 lambda: ops.w4a16_matmul(xb, wpg, sg, 128,
                                          interpret=interp, **b)),
+            ("gemm.lut4", "int8", 0, lambda b:
+                lambda: ops.lut4_matmul(aq, a_s, wp, ws,
+                                        interpret=interp, **b)),
         ]
         for op, dtype, g, make_call in specs:
-            default = autotune.default_blocks(M, K, N, group_size=g)
+            default = (autotune.lut4_default_blocks(M, K, N)
+                       if op == autotune.LUT4_OP
+                       else autotune.default_blocks(M, K, N, group_size=g))
             blocks, us = autotune.tune(op, make_call, M, K, N, dtype,
                                        group_size=g)
             emit(f"kernels.autotune.{op}.{shape_name}", us,
@@ -257,6 +262,10 @@ def bench_kernels(do_tune: bool = False):
                 jax.jit(lambda a1, a2, a3:
                         ops.w4a16_matmul_kmajor(a1, a2, a3, 128)),
                 (xb, w_kmg, sg)),
+            f"lut4_matmul.{shape_name}": (
+                jax.jit(lambda a1, a2, a3, a4:
+                        ops.lut4_matmul_kmajor(a1, a2, a3, a4)),
+                (aq, a_s, w_km, w_s)),
         }
         for name, (fn, fargs) in rows.items():
             us = _time(fn, *fargs)
@@ -265,6 +274,10 @@ def bench_kernels(do_tune: bool = False):
             us = _time(lambda a1, a2, a3, a4: ops.int4_matmul(
                 a1, a2, a3, a4, interpret=True), aq, a_s, wp, w_s)
             emit(f"kernels.int4_matmul_interp.{shape_name}", us,
+                 f"gflops={flops/us*1e-3:.2f}")
+            us = _time(lambda a1, a2, a3, a4: ops.lut4_matmul(
+                a1, a2, a3, a4, interpret=True), aq, a_s, wp, w_s)
+            emit(f"kernels.lut4_matmul_interp.{shape_name}", us,
                  f"gflops={flops/us*1e-3:.2f}")
         us = _time(jax.jit(ref.int4_matmul_ref), aq, a_s, wp, w_s)
         emit(f"kernels.int4_matmul_xla.{shape_name}", us,
@@ -394,7 +407,8 @@ def bench_gemm_backends():
     x = jnp.asarray(rng.standard_normal((M, K), dtype=np.float32))
     flops = 2 * M * K * N
     y_ref = qdense(w, x, QuantConfig(backend="float"))
-    for backend in ("float", "fake_quant", "int_sim", "pallas_int4", "w4a16"):
+    for backend in ("float", "fake_quant", "int_sim", "pallas_int4", "lut4",
+                    "w4a16"):
         fn = jax.jit(lambda a, b=backend: qdense(w, a, QuantConfig(backend=b)))
         us = _time(fn, x)
         y = fn(x)
@@ -505,6 +519,11 @@ def bench_sensitivity():
         emit(f"sensitivity.{row['site']}", 0.0,
              f"mse={row['mse_vs_float']:.3e};"
              f"delta={row['delta_vs_uniform']:.3e}")
+    # uniform-plan backend comparison (int_sim / lut4 / w4a16): lut4 must
+    # equal int_sim exactly — same integer math, different kernel
+    for row in out["backends"]:
+        emit(f"sensitivity.backend.{row['backend']}", 0.0,
+             f"mse={row['mse_vs_float']:.3e}")
 
 
 def check_recompiles(rows: dict) -> list:

@@ -155,12 +155,19 @@ def save_quantized(directory: str, step: int, params, cfg, rt=None,
     if plan is None:
         assert rt is not None, "save_quantized needs a plan or a Runtime"
         plan = active_plan(cfg, rt)
+    site_backends: Dict[str, str] = {}
     packed = plan_pack_tree(params, cfg, plan, min_size=min_size,
-                            backends=CKPT_PACKED, scale_dtype=jnp.bfloat16)
+                            backends=CKPT_PACKED, scale_dtype=jnp.bfloat16,
+                            site_log=site_backends)
+    # per-site backend record: which kernel family each packed site's
+    # nibbles were laid out for.  restore_quantized checks it against the
+    # serving plan so e.g. a lut4 site rebuilds table-lookup serving
+    # instead of silently dropping to nibble-unpack w4a4.
     return save_checkpoint(
         directory, step, packed,
         extra_meta={"format": QUANTIZED_FORMAT, "arch": cfg.name,
-                    "plan": plan_to_dict(plan)})
+                    "plan": plan_to_dict(plan),
+                    "site_backends": site_backends})
 
 
 def restore_quantized(directory: str, step: Optional[int] = None,
@@ -193,6 +200,18 @@ def restore_quantized(directory: str, step: Optional[int] = None,
 
         stored = plan_from_dict(manifest["plan"])
         live = active_plan(cfg, rt)
+        # per-site first: when the plans diverge, name the exact site and
+        # backend pair that would serve wrong-kernel math (the manifest's
+        # site_backends map was recorded at pack time; older checkpoints
+        # without it fall through to the whole-plan rules check)
+        for site, saved_be in manifest.get("site_backends", {}).items():
+            live_be = live.resolve(site).backend
+            assert live_be == saved_be, (
+                f"site {site!r} does not match the plan this checkpoint was "
+                f"saved with: packed for backend {saved_be!r} but the "
+                f"runtime plan {live.name!r} resolves it to {live_be!r}; "
+                f"restoring would serve the wrong kernel math — set "
+                f"Runtime.quant_plan to the stored plan ({stored.name!r})")
         assert live.rules == stored.rules, (
             f"runtime plan {live.name!r} does not match the plan this "
             f"checkpoint was saved with ({stored.name!r}); set "

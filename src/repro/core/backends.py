@@ -96,6 +96,30 @@ register_backend("int_sim")(_int4_backend)
 register_backend("pallas_int4")(_int4_backend)
 
 
+@register_backend("lut4")
+def _lut4_backend(w, x2, cfg, tag):
+    """W4A4 through the paper's LUT multiplier, amortized across a GEMM tile
+    (kernels/lut4_matmul.py): every partial product is *read* out of the
+    16x256 per-nibble tables with a lane-dim take and accumulated in int32
+    on the VPU — no MXU dot, weights stay nibble-packed in-kernel.
+
+    The exact product table is rank-1 (T[a, w] = a*w), so the XLA twin is
+    the same int8 dot as ``int_sim`` — bit-identical logits/tokens between
+    a ``lut4`` plan and an ``int_sim`` plan off-TPU, and between the kernel
+    and its twin on-TPU (integer accumulation is exact)."""
+    xf = x2.astype(jnp.float32)
+    w_scale = quant_scale(w, axis=0, bits=cfg.w_bits)    # [1, N]
+    w_q = quantize(w, w_scale, bits=cfg.w_bits)
+    a_scale = quant_scale(xf, axis=1, bits=cfg.a_bits)   # per-row
+    a_q = quantize(xf, a_scale, bits=cfg.a_bits)
+    # the table kernel is int4-specific; other bit widths keep the XLA path
+    if ops.use_pallas() and cfg.a_bits == 4 and cfg.w_bits == 4:
+        return ops.lut4_matmul_kmajor(a_q, a_scale, pack_kmajor(w_q),
+                                      w_scale, tag=tag)
+    acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * a_scale * w_scale
+
+
 @register_backend("w4a16")
 def _w4a16_backend(w, x2, cfg, tag):
     """Weight-only serving: activation-dtype MXU contraction with scales in

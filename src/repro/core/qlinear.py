@@ -17,6 +17,10 @@ are additions, not edits):
   w4a16       -- weight-only serving: kernels.ops.w4a16_matmul (activation-
                  dtype MXU contraction, scales in the epilogue; XLA twin
                  elsewhere).  Tile shapes come from kernels.autotune.
+  lut4        -- W4A4 through the paper's LUT multiplier amortized across a
+                 GEMM tile: kernels.ops.lut4_matmul (per-nibble product
+                 tables + lane-dim take, MXU-free int32 accumulation; XLA
+                 twin is the same int8 dot as int_sim — bit-identical).
   netlist     -- bit-exact FPGA-netlist simulation of every 4-bit product
                  (the paper's circuit, used as the end-to-end oracle; O(bits)
                  slower, tests / tiny shapes only).
@@ -45,7 +49,7 @@ from .quant import pack_int4, quant_scale, quantize, unpack_int4
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    backend: str = "fake_quant"     # float | fake_quant | int_sim | pallas_int4 | w4a16 | netlist
+    backend: str = "fake_quant"     # float | fake_quant | int_sim | pallas_int4 | lut4 | w4a16 | netlist
     w_bits: int = 4
     a_bits: int = 4
     group_size: int = 0             # 0 => per-output-channel scales
@@ -134,9 +138,20 @@ def _packed_backend(w, x2, cfg: QuantConfig, tag: str = ""):
     # pure-XLA/pjit contract even on Pallas backends, and non-int4
     # activation configs keep the XLA path (a_bits honored)
     kernel_ok = ops.use_pallas() and packed.ndim == 2
-    if cfg.backend in ("w4a4_packed", "int_sim", "pallas_int4"):
+    if cfg.backend in ("w4a4_packed", "int_sim", "pallas_int4", "lut4"):
         xf = x2.astype(jnp.float32)
-        if kernel_ok and cfg.backend != "int_sim" and cfg.a_bits == 4:
+        if kernel_ok and cfg.backend == "lut4" and cfg.a_bits == 4:
+            # table-lookup kernel: weights stay packed in-kernel (the tables
+            # index the planar byte directly), activations quantized here
+            w_km = w.get("packed_km")
+            if w_km is None:
+                w_km = prepack_kmajor(packed)
+            a_scale = quant_scale(xf, axis=1, bits=4)
+            a_q = quantize(xf, a_scale, bits=4)
+            return ops.lut4_matmul_kmajor(a_q, a_scale, w_km, w_scale,
+                                          tag=tag)
+        if kernel_ok and cfg.backend not in ("int_sim", "lut4") \
+                and cfg.a_bits == 4:
             w_km = w.get("packed_km")
             if w_km is None:
                 w_km = prepack_kmajor(packed)
@@ -146,6 +161,17 @@ def _packed_backend(w, x2, cfg: QuantConfig, tag: str = ""):
         w_q = unpack_int4(packed, axis=-1)
         acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
         return acc.astype(jnp.float32) * a_scale * w_scale
+    if cfg.backend not in ("w4a16", "w4a16_packed"):
+        # a packed weight reaching a backend with no packed path used to
+        # fall through to the w4a16 dequant branch silently — wrong math
+        # for anything that isn't weight-only.  Loud beats lenient: the
+        # plan/manifest checks in checkpoint.restore_quantized keep a legal
+        # configuration from ever landing here.
+        raise ValueError(
+            f"packed weight at site {tag!r} reached backend "
+            f"{cfg.backend!r}, which has no packed-weight path; restore "
+            f"with the plan the checkpoint was packed under (the manifest "
+            f"records per-site backends) or rebuild from float masters")
     # w4a16 / w4a16_packed: pack_weight_nd scales are per-output-channel
     # [1, N] or per-group [K//G, 1, N] — the group size is recovered from
     # the scale shape
@@ -208,10 +234,16 @@ def prepack_tree(params):
 
     MoE expert weights are skipped: they run through the batched einsum in
     models/moe.py, never the 2D kernels, so a twin would just double their
-    footprint for the whole serving lifetime."""
+    footprint for the whole serving lifetime.
+
+    Also commits the 16x256 per-nibble product tables to device
+    (``packing.lut4_tables``), so a plan with ``lut4`` sites pays the LUT
+    build at prepack time rather than inside the first serving step."""
     import jax
 
-    from repro.kernels.packing import nmajor_to_kmajor
+    from repro.kernels.packing import lut4_tables, nmajor_to_kmajor
+
+    lut4_tables()
 
     def maybe(path, d):
         in_experts = any(

@@ -67,7 +67,8 @@ SERVE_PACKED = frozenset({"w4a4_packed", "w4a16_packed"})
 
 #: backends a *quantized checkpoint* stores packed (everything that serves
 #: from int4 nibbles; fake_quant/netlist/float sites keep float masters).
-CKPT_PACKED = SERVE_PACKED | frozenset({"int_sim", "pallas_int4", "w4a16"})
+CKPT_PACKED = SERVE_PACKED | frozenset(
+    {"int_sim", "pallas_int4", "lut4", "w4a16"})
 
 
 def join_site(prefix: str, leaf: str) -> str:
@@ -353,7 +354,8 @@ def _leaf_site(comps: Tuple[str, ...]) -> str:
 def plan_pack_tree(params, cfg, plan: QuantPlan, *,
                    min_size: int = 1 << 12,
                    backends: frozenset = SERVE_PACKED,
-                   scale_dtype=jnp.float32):
+                   scale_dtype=jnp.float32,
+                   site_log: Optional[Dict[str, str]] = None):
     """Pack model weights into the int4 serving format *per resolved site*.
 
     Sites resolving to a backend outside ``backends`` (float, fake_quant,
@@ -362,7 +364,13 @@ def plan_pack_tree(params, cfg, plan: QuantPlan, *,
     splits into per-repeat subtrees ``{"r0": ..., "r1": ...}`` so different
     layers can carry different weight formats — the forward pass detects the
     split and unrolls.  ``scale_dtype=bfloat16`` is the quantized-checkpoint
-    storage format (4x smaller artifacts; see checkpoint.save_quantized)."""
+    storage format (4x smaller artifacts; see checkpoint.save_quantized).
+
+    ``site_log`` (optional dict, mutated in place) records which backend each
+    *actually packed* site resolved to — the checkpoint manifest stores it so
+    a restore can verify per-site that the serving plan rebuilds the same
+    backend the nibbles were packed for (a ``lut4`` site silently served as
+    nibble-unpack w4a4 would be a wrong-kernel bug, not just a perf bug)."""
     from .qlinear import PACKABLE_NAMES, pack_weight_nd
 
     def pack_leaf(leaf, site: str, *, check_name: Optional[str] = None):
@@ -385,6 +393,8 @@ def plan_pack_tree(params, cfg, plan: QuantPlan, *,
         )
         if not packable:
             return leaf
+        if site_log is not None:
+            site_log[site] = qc.backend
         # grouped scales only exist for the weight-only backends (W4A4's
         # int32 accumulation runs over full K, so its scales are per-channel
         # by construction), and expert stacks dequantize per-channel in the

@@ -153,6 +153,36 @@ def attn_candidate_blocks(op: str, M: int, K: int, N: int,
     return out
 
 
+#: the table-lookup GEMM has no MXU dot: per k-step cost is a fori_loop of
+#: bk/2 two-level takes, so its sweet spot is smaller bk (shorter in-kernel
+#: loop, more grid-level parallelism) and lane-wide bn (each take is a
+#: full-width [bm, bn] vector op).  It gets its own candidate set.
+LUT4_OP = "gemm.lut4"
+
+
+def lut4_default_blocks(M: int, K: int, N: int) -> Dict[str, int]:
+    bm = 128 if M >= 128 else max(8, _round_up(M, 8))
+    bn = min(256, _round_up(N, 128)) if N >= 256 else 128
+    bk = min(256, _round_up(K, 2))
+    return {"bm": bm, "bn": bn, "bk": max(2, bk)}
+
+
+def lut4_candidate_blocks(M: int, K: int, N: int) -> List[Dict[str, int]]:
+    bms = sorted({b for b in (8, 32, 128) if b <= _round_up(max(M, 8), 8)}
+                 | {lut4_default_blocks(M, K, N)["bm"]})
+    bns = [b for b in (128, 256) if b <= _round_up(N, 128)] or [128]
+    bks = sorted({max(2, _round_up(min(b, K), 2)) for b in (64, 128, 256, 512)})
+    out, seen = [], set()
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                key = (bm, bn, bk)
+                if key not in seen:
+                    seen.add(key)
+                    out.append({"bm": bm, "bn": bn, "bk": bk})
+    return out
+
+
 def default_blocks(M: int, K: int, N: int, group_size: int = 0) -> Dict[str, int]:
     """Shape-clipped MXU-aligned defaults.
 
@@ -204,6 +234,8 @@ def get_blocks(op: str, M: int, K: int, N: int, dtype: str,
                     "bk": int(hit["bk"])}
     if op in ATTN_OPS:
         return attn_default_blocks(op, M, K, N, group_size)
+    if op == LUT4_OP:
+        return lut4_default_blocks(M, K, N)
     return default_blocks(M, K, N, group_size)
 
 
@@ -247,6 +279,8 @@ def tune(op: str, make_call: Callable[[Dict[str, int]], Callable[[], object]],
         cands = list(candidates)
     elif op in ATTN_OPS:
         cands = attn_candidate_blocks(op, M, K, N, group_size)
+    elif op == LUT4_OP:
+        cands = lut4_candidate_blocks(M, K, N)
     else:
         cands = candidate_blocks(M, K, N, group_size)
     best, best_us = None, float("inf")
@@ -261,8 +295,12 @@ def tune(op: str, make_call: Callable[[Dict[str, int]], Callable[[], object]],
         # every candidate failed: fall back to defaults but do NOT persist —
         # float("inf") is not valid JSON and a dead entry would shadow a
         # future successful search
-        fallback = (attn_default_blocks(op, M, K, N, group_size)
-                    if op in ATTN_OPS else default_blocks(M, K, N, group_size))
+        if op in ATTN_OPS:
+            fallback = attn_default_blocks(op, M, K, N, group_size)
+        elif op == LUT4_OP:
+            fallback = lut4_default_blocks(M, K, N)
+        else:
+            fallback = default_blocks(M, K, N, group_size)
         return fallback, float("inf")
     entry = {**best, "us": best_us}
     _CACHE[cache_key(op, M, K, N, dtype, group_size, tag=tag)] = entry

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: table-lookup W4A4 GEMM — the paper's LUT multiplier
+amortized across a matmul tile.
+
+The paper replaces the FPGA's partial-product array with a 4x4-bit lookup
+table in LUT6 primitives.  The elementwise port (`kernels/lut_mul4.py`)
+evaluates that table per scalar product — a 256-wide one-hot contraction or a
+flat gather — and lands ~300x behind the int8 reference because every product
+pays the full table-evaluation latency.  LUTMUL's observation (PAPERS.md) is
+that the lookup cost amortizes when one table row is reused across a GEMM
+tile; this kernel is that shape on the VPU:
+
+  * host side, once per process: the 16x256 per-nibble partial-product tables
+    (`packing.nibble_product_tables`) — row = activation nibble, column = a
+    *packed* K-major weight byte, entry = the sign-extended int8 product.
+    Weights therefore stay packed end-to-end: the tables fold sign-extend,
+    multiply, and nibble-select into one read.
+  * in-kernel, per contraction row: one row-select `take` (activation nibble
+    picks the table row) plus one lane-dim `take_along_axis` (the [bkh, bn]
+    packed weight byte picks the lane slice) — `packing.table_take`.  Both
+    are full-width vector ops: no per-element one-hot, no scalar gather loop.
+  * accumulation is int32 adds on the VPU (MXU-free), with the dequant scales
+    folded into the epilogue exactly like `w4a16_matmul`.
+
+  grid (M/bm, N/bn, K/bk), K innermost:
+    k == 0     : zero the accumulator tile
+    every k    : fori_loop over the bk/2 packed rows; two table_take lookups
+                 (lo/hi planar halves) per row, int32 accumulate
+    k == K-1   : fused dequant epilogue  out *= a_scale[m] * w_scale[n]
+
+Bit-exactness: the exact product table is rank-1 (T[a, w] = a*w), so the
+lookup-sum is the same integer as the int8 dot; int32 accumulation is exact
+and |acc| < 2^24 keeps the f32 carry exact, so this kernel is bitwise
+identical to `int4_matmul` and to the XLA twin in `ops.lut4_matmul`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .packing import lut4_tables, pad_to, table_take
+
+
+def _kernel(alo_ref, ahi_ref, w_ref, tlo_ref, thi_ref, as_ref, ws_ref, o_ref,
+            *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Unsigned nibble codes index the table rows; sign lives in the entries.
+    u_lo = (alo_ref[...] & 0xF).astype(jnp.int32)   # [bm, bkh]
+    u_hi = (ahi_ref[...] & 0xF).astype(jnp.int32)
+    wb = w_ref[...].astype(jnp.int32)               # [bkh, bn] packed bytes
+    t_lo = tlo_ref[...]                             # [16(+pad), 256] int8
+    t_hi = thi_ref[...]
+    bm, bkh = u_lo.shape
+    bn = wb.shape[1]
+
+    def body(kh, acc):
+        rows_lo = jax.lax.dynamic_slice(u_lo, (0, kh), (bm, 1))[:, 0]
+        rows_hi = jax.lax.dynamic_slice(u_hi, (0, kh), (bm, 1))[:, 0]
+        lanes = jnp.broadcast_to(
+            jax.lax.dynamic_slice(wb, (kh, 0), (1, bn)), (bm, bn))
+        acc += table_take(t_lo, rows_lo, lanes).astype(jnp.int32)
+        acc += table_take(t_hi, rows_hi, lanes).astype(jnp.int32)
+        return acc
+
+    acc = jax.lax.fori_loop(0, bkh, body, jnp.zeros((bm, bn), jnp.int32))
+    o_ref[...] += acc.astype(jnp.float32)           # exact: |acc| < 2^24
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] * as_ref[...] * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def lut4_matmul(
+    a_q: jnp.ndarray,          # [M, K] int8 holding int4 values
+    a_scale: jnp.ndarray,      # [M, 1] f32
+    w_kmajor: jnp.ndarray,     # [ceil(K/2), N] uint8, planar K-major
+    w_scale: jnp.ndarray,      # [1, N] f32
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = None,
+) -> jnp.ndarray:
+    M, K = a_q.shape
+    N = w_kmajor.shape[1]
+    Keven = w_kmajor.shape[0] * 2
+    assert Keven in (K, K + 1), (a_q.shape, w_kmajor.shape)
+    a = pad_to(a_q, Keven, 1)               # odd K: one zero column
+    assert bk % 2 == 0, bk
+    bkh = bk // 2
+
+    # Zero padding is absorbing through the tables: nibble code 0 selects the
+    # all-zero table row, and weight byte 0 selects an all-zero lane pair.
+    K2 = Keven // 2
+    a_lo = pad_to(pad_to(a[:, :K2], bm, 0), bkh, 1)
+    a_hi = pad_to(pad_to(a[:, K2:], bm, 0), bkh, 1)
+    a_scale = pad_to(a_scale, bm, 0, value=1)
+    w_kmajor = pad_to(pad_to(w_kmajor, bkh, 0), bn, 1)
+    w_scale = pad_to(w_scale, bn, 1)
+    Mp = a_lo.shape[0]
+    Np = w_kmajor.shape[1]
+    nk = a_lo.shape[1] // bkh
+
+    # Pad table rows 16 -> 32 so the block meets the int8 (32, 128) min tile.
+    t_lo, t_hi = (pad_to(t, 32, 0) for t in lut4_tables())
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkh, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((32, 256), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((32, 256), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=(jax.default_backend() != "tpu"
+                   if interpret is None else interpret),
+    )(a_lo, a_hi, w_kmajor, t_lo, t_hi, a_scale, w_scale)
+    return out[:M, :N]

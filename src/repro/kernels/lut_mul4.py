@@ -7,13 +7,18 @@ VMEM next to the operand tiles.  Two lookup strategies:
   * ``onehot``  -- indices one-hot-encoded and contracted against the table
     with the MXU (`jnp.dot`).  This is the systolic-array-native realisation
     of "table lookup" and lowers on TPU unconditionally.
-  * ``take``    -- `jnp.take` dynamic gather (VPU path).
+  * ``take``    -- lane-dim `take_along_axis` (VPU path): each output row
+    reads its products out of a row-broadcast copy of the table via
+    `packing.table_take`, the same vectorized lookup the table-lookup GEMM
+    (`lut4_matmul.py`) runs per contraction row.  This replaced a serialized
+    per-element flat `jnp.take` gather that was ~170x slower.
 
 Both are validated against `ref.mul4_ref`.  The roofline story (see
-EXPERIMENTS.md): a LUT lookup costs 256 MACs (onehot) or a serialized gather
+EXPERIMENTS.md): a LUT lookup costs 256 MACs (onehot) or a vector gather
 (take) per element versus 1 MAC for the native int8 multiply -- on TPU the
-paper's insight pays off in *packing + MXU scheduling* (see int4_matmul.py),
-not in table evaluation; we implement both to make that comparison concrete.
+paper's insight pays off when the lookup is *amortized across a GEMM tile*
+(see lut4_matmul.py) or traded for packing + MXU scheduling (int4_matmul.py);
+we keep the elementwise forms to make that comparison concrete.
 """
 
 from __future__ import annotations
@@ -24,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .packing import flatten_to_tiles
+from .packing import flatten_to_tiles, table_take
 from .ref import make_product_lut
 
 # VPU-aligned tile: 8 sublanes x 128 lanes.
@@ -49,7 +54,11 @@ def _kernel_take(a_ref, b_ref, lut_ref, o_ref):
     a = a_ref[...].astype(jnp.int32)
     b = b_ref[...].astype(jnp.int32)
     idx = ((a & 0xF) << 4) | (b & 0xF)
-    o_ref[...] = jnp.take(lut_ref[...], idx.reshape(-1)).reshape(idx.shape)
+    # The composite nibble-pair index collapses the row select (degenerate
+    # single-row table), leaving the pure lane-dim take: every element of a
+    # row gathers from the same 256-lane table copy in one vector op.
+    rows = jnp.zeros((idx.shape[0],), jnp.int32)
+    o_ref[...] = table_take(lut_ref[...].reshape(1, 256), rows, idx)
 
 
 @functools.partial(jax.jit, static_argnames=("strategy", "block", "interpret"))

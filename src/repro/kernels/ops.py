@@ -34,6 +34,7 @@ from repro.observability.metrics import global_registry
 from . import autotune, packing, paged_attention, ragged_attention, ref
 from .int4_matmul import int4_matmul as _int4_matmul
 from .int4_matmul import int4_matmul_fused as _int4_matmul_fused
+from .lut4_matmul import lut4_matmul as _lut4_matmul
 from .lut_mul4 import lut_mul4 as _lut_mul4
 from .w4a16_matmul import w4a16_matmul as _w4a16_matmul
 
@@ -118,6 +119,47 @@ def int4_matmul_kmajor(a_q, a_scale, w_kmajor, w_scale,
     b = _blocks("int4_matmul", M, K, w_kmajor.shape[1], a_q.dtype, 0, tag,
                 {"bm": bm, "bn": bn, "bk": bk})
     return _int4_matmul(a_q, a_scale, w_kmajor, w_scale,
+                        interpret=m == _INTERPRET, **b)
+
+
+def lut4_matmul(a_q, a_scale, w_packed, w_scale,
+                interpret: Optional[bool] = None, tag: str = "",
+                bm=None, bn=None, bk=None):
+    """Table-lookup W4A4 matmul (`kernels/lut4_matmul.py`).
+
+    `w_packed`: serialized interleaved [K, N//2] (``core.quant.pack_int4``).
+    """
+    m = _mode(interpret)
+    if m == _XLA:
+        _count_dispatch("lut4_matmul", m)
+        # XLA twin: the exact product table is rank-1 (T[a, w] = a*w), so
+        # the lookup-sum collapses to the int8 dot — bit-identical because
+        # integer accumulation is exact (see ref.lut4_matmul_ref).
+        return ref.int4_matmul_ref(a_q, a_scale, w_packed, w_scale)
+    return lut4_matmul_kmajor(
+        a_q, a_scale, packing.prepack_kmajor(w_packed), w_scale,
+        interpret=m == _INTERPRET, tag=tag, bm=bm, bn=bn, bk=bk)
+
+
+def lut4_matmul_kmajor(a_q, a_scale, w_kmajor, w_scale,
+                       interpret: Optional[bool] = None, tag: str = "",
+                       bm=None, bn=None, bk=None):
+    """Table-lookup W4A4 matmul on planar K-major weights.
+
+    Block sizes resolve through ``kernels.autotune`` op ``gemm.lut4``, which
+    carries its own candidate set (cost scales with the per-tile lookup loop
+    over bk/2 packed rows, so it favors smaller bk than the MXU kernels).
+    """
+    m = _mode(interpret)
+    _count_dispatch("lut4_matmul_kmajor", m)
+    if m == _XLA:
+        w_q = packing.unpack_kmajor(w_kmajor)[: a_q.shape[1]]
+        acc = jnp.dot(a_q, w_q, preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * a_scale * w_scale
+    M, K = a_q.shape
+    b = _blocks("gemm.lut4", M, K, w_kmajor.shape[1], a_q.dtype, 0, tag,
+                {"bm": bm, "bn": bn, "bk": bk})
+    return _lut4_matmul(a_q, a_scale, w_kmajor, w_scale,
                         interpret=m == _INTERPRET, **b)
 
 

@@ -31,6 +31,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def pad_to(x: jnp.ndarray, mult: int, axis: int, value=0) -> jnp.ndarray:
@@ -93,6 +94,57 @@ def nmajor_to_kmajor(w_packed: jnp.ndarray, row_mult: int = 2) -> jnp.ndarray:
     """Serialized interleaved [..., K, N//2] -> kernel planar [..., K'/2, N]
     (K' = K rounded up to a multiple of `row_mult`, at least even)."""
     return pack_kmajor(unpack_interleaved(w_packed), row_mult)
+
+
+# ------------------------------------------- per-nibble product tables -----
+@functools.lru_cache(maxsize=None)
+def nibble_product_tables() -> Tuple[np.ndarray, np.ndarray]:
+    """The paper's exact 4x4-bit product table, tiled for GEMM lookup.
+
+    Returns ``(t_lo, t_hi)``, each ``[16, 256]`` int8 host arrays:
+
+        t_lo[a, byte] = sext4(a) * sext4(byte & 0xF)
+        t_hi[a, byte] = sext4(a) * sext4(byte >> 4)
+
+    Row index = activation nibble (unsigned 2's-complement code), column
+    index = a *packed K-major weight byte* — so a kernel holding packed
+    weights never unpacks them: one row-select per activation nibble plus
+    one lane-dim take per weight byte reads the sign-extended product
+    directly.  Products of int4 values fit int8 (|p| <= 64).  8 KiB total,
+    built once per process and shared by every weight tensor.
+    """
+    s = ((np.arange(16, dtype=np.int32) ^ 8) - 8)          # sext4 of 0..15
+    byte = np.arange(256, dtype=np.int32)
+    t_lo = s[:, None] * s[byte & 0xF][None, :]
+    t_hi = s[:, None] * s[byte >> 4][None, :]
+    return t_lo.astype(np.int8), t_hi.astype(np.int8)
+
+
+@functools.lru_cache(maxsize=None)
+def lut4_tables() -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-resident ``nibble_product_tables()`` (committed once, cached
+    for the life of the process — the \"prepack\" of the LUT backend).
+
+    ``ensure_compile_time_eval`` keeps the cached values concrete even when
+    the first call happens under an outer trace (a tracer must never be
+    memoized past its trace's lifetime)."""
+    t_lo, t_hi = nibble_product_tables()
+    with jax.ensure_compile_time_eval():
+        return (jax.block_until_ready(jnp.asarray(t_lo)),
+                jax.block_until_ready(jnp.asarray(t_hi)))
+
+
+def table_take(table: jnp.ndarray, rows: jnp.ndarray,
+               lanes: jnp.ndarray) -> jnp.ndarray:
+    """Two-level vectorized table lookup: ``table[rows[i], lanes[i, j]]``.
+
+    ``rows`` ``[m]`` selects one table row per output row (activation
+    nibble); ``lanes`` ``[m, n]`` then takes along the lane dimension
+    (packed weight byte).  Both steps are full-width vector ops — no
+    per-element one-hot expansion, no scalar gather loop.
+    """
+    sel = jnp.take(table, rows, axis=0)          # [m, 256]
+    return jnp.take_along_axis(sel, lanes, axis=-1)
 
 
 # ------------------------------------------------- prepacked-weight cache --

@@ -11,6 +11,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.quant import unpack_int4
+from .packing import nibble_product_tables, nmajor_to_kmajor, pad_to
 
 
 def make_product_lut() -> np.ndarray:
@@ -18,15 +19,12 @@ def make_product_lut() -> np.ndarray:
 
     This is the TPU re-homing of the paper's LUT-based multiplier: the full
     4x4-bit product space precomputed into a table small enough to live in
-    VMEM (256 bytes), indexed instead of recomputed.
+    VMEM (256 bytes), indexed instead of recomputed.  A view of the GEMM
+    tables: t_lo[a, byte] for byte < 16 has a zero high nibble, so its first
+    16 columns are exactly sext4(a) * sext4(b).
     """
-    t = np.zeros(256, dtype=np.int8)
-    for a in range(16):
-        sa = a - 16 if a >= 8 else a
-        for b in range(16):
-            sb = b - 16 if b >= 8 else b
-            t[(a << 4) | b] = sa * sb
-    return t
+    t_lo, _ = nibble_product_tables()
+    return np.ascontiguousarray(t_lo[:, :16]).reshape(256)
 
 
 def mul4_ref(a_q: jnp.ndarray, b_q: jnp.ndarray) -> jnp.ndarray:
@@ -45,6 +43,32 @@ def int4_matmul_ref(
     acc = jnp.dot(
         a_q.astype(jnp.int8), w_q, preferred_element_type=jnp.int32
     )
+    return acc.astype(jnp.float32) * a_scale * w_scale
+
+
+def lut4_matmul_ref(
+    a_q: jnp.ndarray,          # [M, K] int8 holding int4 values
+    a_scale: jnp.ndarray,      # [M, 1] f32
+    w_packed: jnp.ndarray,     # [K, N//2] uint8 (two int4 per byte, packed on N)
+    w_scale: jnp.ndarray,      # [1, N] f32
+) -> jnp.ndarray:
+    """Table-formulation W4A4 oracle: every partial product is *read* from
+    the 16x256 per-nibble tables (never multiplied), then summed in int32.
+
+    Materializes the [M, K/2, N] partial-product cube, so test shapes only.
+    Bitwise equal to `int4_matmul_ref` because the exact product table is
+    rank-1 (T[a, w] = a*w) and integer sums are exact — that identity is
+    what makes the XLA twin of the `lut4` backend an int8 dot.
+    """
+    t_lo, t_hi = (jnp.asarray(t) for t in nibble_product_tables())
+    wb = nmajor_to_kmajor(w_packed).astype(jnp.int32)        # [Kh, N]
+    kh = wb.shape[0]
+    a = pad_to(a_q, 2 * kh, 1)
+    u_lo = (a[:, :kh] & 0xF).astype(jnp.int32)               # [M, Kh]
+    u_hi = (a[:, kh:] & 0xF).astype(jnp.int32)
+    pp = (t_lo[u_lo[:, :, None], wb[None, :, :]].astype(jnp.int32)
+          + t_hi[u_hi[:, :, None], wb[None, :, :]])          # [M, Kh, N]
+    acc = jnp.sum(pp, axis=1, dtype=jnp.int32)
     return acc.astype(jnp.float32) * a_scale * w_scale
 
 

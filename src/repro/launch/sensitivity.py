@@ -32,6 +32,16 @@ def default_groups(cfg: ArchConfig) -> Sequence[str]:
     return groups
 
 
+#: uniform-plan specs for the backend-comparison table: each serving GEMM
+#: backend at its native activation precision (w4a16 keeps bf16 activations;
+#: the W4A4 family quantizes per-token).
+COMPARE_BACKENDS: Dict[str, str] = {
+    "int_sim": "*=int_sim",
+    "lut4": "*=lut4",
+    "w4a16": "*=w4a16/a16",
+}
+
+
 def sensitivity_sweep(cfg: ArchConfig, *,
                       groups: Optional[Sequence[str]] = None,
                       base_backend: str = "int_sim",
@@ -41,6 +51,10 @@ def sensitivity_sweep(cfg: ArchConfig, *,
     Returns ``{"uniform_mse_vs_float": ..., "per_site": [{"site",
     "mse_vs_float", "delta_vs_uniform"}, ...]}`` — delta > 0 means floating
     that group removes that much of the uniform plan's quantization error.
+    Also emits ``"backends"``: uniform-plan logits-MSE for every entry in
+    ``COMPARE_BACKENDS``, so the table reports ``lut4`` alongside
+    int4/w4a16 (identical integer math makes int_sim and lut4 rows equal —
+    a drift between them is a kernel bug, not a quantization choice).
     """
     groups = list(groups) if groups is not None else list(default_groups(cfg))
     key = jax.random.PRNGKey(seed)
@@ -68,10 +82,17 @@ def sensitivity_sweep(cfg: ArchConfig, *,
         rows.append({"site": g, "mse_vs_float": mse,
                      "delta_vs_uniform": mse_u - mse})
     rows.sort(key=lambda r: -r["delta_vs_uniform"])
+    backend_rows = []
+    for be, spec in COMPARE_BACKENDS.items():
+        mse = (mse_u if spec == uniform_spec else
+               float(np.mean((logits_for(quant_plan=spec) - ref) ** 2)))
+        backend_rows.append({"backend": be, "plan": spec,
+                             "mse_vs_float": mse})
     return {
         "arch": cfg.name,
         "base_backend": base_backend,
         "batch": batch, "seq": seq,
         "uniform_mse_vs_float": mse_u,
         "per_site": rows,
+        "backends": backend_rows,
     }
