@@ -229,6 +229,17 @@ class ServingConfig:
     # fill the remainder.  The engine grows it (next power of two, one
     # fresh compile) if running requests ever exceed it.
     token_budget: int = 0
+    # ---- request-lifecycle hardening (see serving/chaos.py) -------------
+    # bounded admission queue: submit() raises a typed ShedError once this
+    # many requests wait (0 = unbounded, the legacy behavior).  Load
+    # shedding instead of unbounded queue growth under overload.
+    max_queue: int = 0
+    # watchdog deadline around each engine step (distributed.fault_tolerance
+    # Watchdog): a step exceeding it bumps
+    # serving_step_deadline_exceeded_total, and raises StepDeadlineExceeded
+    # when strict.  0 = off.
+    step_deadline_s: float = 0.0
+    step_deadline_strict: bool = False
 
     def __post_init__(self):
         assert self.layout in ("paged", "contiguous"), self.layout
@@ -237,6 +248,7 @@ class ServingConfig:
             "the ragged step packs tokens through block tables (paged only)"
         assert self.max_ctx % self.page_size == 0, \
             f"max_ctx {self.max_ctx} must be a multiple of page_size {self.page_size}"
+        assert self.max_queue >= 0 and self.step_deadline_s >= 0.0
 
     @property
     def budget(self) -> int:

@@ -30,8 +30,19 @@ from typing import Callable, Optional
 log = logging.getLogger("repro.ft")
 
 
+class StepDeadlineExceeded(RuntimeError):
+    """A watched step (training or serving) overran its watchdog deadline.
+    Raised by callers that run the Watchdog in strict mode — e.g. the
+    serving engine with ``ServingConfig.step_deadline_strict`` — after the
+    step returns; the watchdog itself cannot interrupt a hung device call,
+    it can only make the overrun loud."""
+
+
 class Watchdog:
-    """Arms a deadline around each step; fires `on_timeout` if exceeded."""
+    """Arms a deadline around each step; fires `on_timeout` if exceeded.
+    Re-armable: ``arm()`` clears a previous firing, so one instance can
+    guard every step of a long-running loop (the serving engine arms it
+    once per ``step()``)."""
 
     def __init__(self, deadline_s: float, on_timeout: Optional[Callable] = None):
         self.deadline_s = deadline_s
@@ -41,6 +52,7 @@ class Watchdog:
 
     def arm(self):
         self.disarm()
+        self.fired.clear()
         self._timer = threading.Timer(self.deadline_s, self._fire)
         self._timer.daemon = True
         self._timer.start()

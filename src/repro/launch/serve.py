@@ -122,10 +122,44 @@ def serve(arch: str, *, reduced=True, layers=None, layout=None, max_batch=4,
           burst=4, period=8,
           quant_backend="w4a4_packed", quant_plan=None, cache_dtype="bfloat16",
           quantized_ckpt=False, ckpt_dir=None, sweep=False, seed=0,
+          chaos_seed=0, max_queue=0,
           trace_out=None, metrics=True):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced(**({"n_layers": layers} if layers else {}))
+
+    if scenario in ("chaos", "cancel_storm"):
+        # deterministic fault-injection harness (serving.chaos): seeded
+        # cancel/deadline storms + allocator failures + step exceptions +
+        # mid-run stop/resume, run in BOTH step modes against one fault-
+        # free reference.  Exact-softmax prefill ("chunked") so the
+        # ragged-vs-bucketed survivor-identity assertion compares
+        # identical math (same reason compare mode uses it).
+        from repro.serving.chaos import (
+            CANCEL_STORM, ChaosConfig, chaos_report,
+        )
+        rt = Runtime(scan_layers=True, attn_impl="chunked",
+                     attn_chunk_q=min(512, max_ctx), loss_chunk=0,
+                     quant_backend=None if quant_plan else quant_backend,
+                     quant_plan=quant_plan, cache_dtype=cache_dtype,
+                     remat="none")
+        base = CANCEL_STORM if scenario == "cancel_storm" else ChaosConfig()
+        chaos = dataclasses.replace(
+            base, seed=chaos_seed, n_requests=requests, rate_per_step=rate,
+            prompt_lens=tuple(prompt_lens), gen_lens=tuple(gen_lens),
+            stop_resume_at=(max(2, requests // 2),))
+        # chaos runs always bound the admission queue so load shedding is
+        # exercised (still deterministic: queue depth at submit time is a
+        # pure function of the seed)
+        sv = ServingConfig(layout="paged", max_batch=max_batch,
+                           page_size=page_size, num_pages=num_pages,
+                           max_ctx=max_ctx, prefix_cache=prefix_cache,
+                           token_budget=token_budget,
+                           max_queue=max_queue or 2 * max_batch)
+        return {"arch": arch, "reduced": reduced, "scenario": scenario,
+                "quant": quant_plan or quant_backend,
+                "cache_dtype": cache_dtype,
+                **chaos_report(cfg, rt, sv, chaos)}
     if layout is None:   # paged needs a pure-attention stack (SSM doesn't page)
         blocks = tuple(cfg.pattern) + tuple(cfg.tail)
         layout = "paged" if all(bt == "A" for bt in blocks) else "contiguous"
@@ -318,13 +352,18 @@ def main():
     ap.add_argument("--prompt-lens", default="8,16,32")
     ap.add_argument("--gen-lens", default="8,16")
     ap.add_argument("--scenario", default="poisson",
-                    choices=["poisson", "shared_prefix", "mixed", "bursty"],
+                    choices=["poisson", "shared_prefix", "mixed", "bursty",
+                             "chaos", "cancel_storm"],
                     help="shared_prefix: every prompt = one shared system "
                          "prefix (--sys-len) + a unique user suffix drawn "
                          "from --prompt-lens; mixed: one arrival per step "
                          "with cycling lengths (batch composition changes "
                          "every step); bursty: --burst arrivals every "
-                         "--period steps")
+                         "--period steps; chaos: seeded fault-injection "
+                         "harness (cancels, deadlines, allocator failures, "
+                         "step exceptions, stop/resume) with survivor "
+                         "token-identity vs a fault-free run; cancel_storm: "
+                         "chaos preset with only a high-rate cancel storm")
     ap.add_argument("--sys-len", type=int, default=32,
                     help="shared system-prompt length (shared_prefix)")
     ap.add_argument("--step", default="bucketed",
@@ -359,6 +398,15 @@ def main():
     ap.add_argument("--sweep", action="store_true",
                     help="add the per-site sensitivity table to the report")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos scenarios' trace + fault "
+                         "stream (independent of --seed, which picks the "
+                         "model weights)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: submissions past this "
+                         "many waiting requests shed with a typed error "
+                         "(0 = unbounded; chaos scenarios default to "
+                         "2*max_batch)")
     ap.add_argument("--trace-out", default=None,
                     help="write a Chrome/Perfetto trace_event JSON timeline "
                          "of the primary layout's run (open at "
@@ -386,6 +434,7 @@ def main():
         cache_dtype=args.cache_dtype,
         quantized_ckpt=args.quantized_ckpt, ckpt_dir=args.ckpt_dir,
         sweep=args.sweep, seed=args.seed,
+        chaos_seed=args.chaos_seed, max_queue=args.max_queue,
         trace_out=args.trace_out, metrics=args.metrics == "on",
     )
     text = json.dumps(out, indent=1)

@@ -13,13 +13,30 @@ Layers (bottom-up):
                       batch and tracks per-request state and latency stats.
   * ``api``        -- submit()/step()/collect() facade + synthetic Poisson
                       traffic for benchmarking realistic request mixes.
+  * ``chaos``      -- deterministic fault-injection harness: seeded cancel/
+                      deadline storms, allocator failures, step exceptions,
+                      and mid-run stop/resume, with pool/scheduler
+                      invariants asserted after every event and survivor
+                      tokens compared bit-for-bit against a fault-free run.
+
+Request lifecycle: every retired request carries exactly one typed
+``outcome`` — ``ok | cancelled | timeout | shed | error`` (scheduler
+module constants).  All lifecycle bookkeeping is host-side, so the donated
+single-signature jits and the zero-steady-state-recompile guarantee are
+untouched by cancellation, deadlines, shedding, or snapshots.
 """
 
 from .api import ServingAPI, poisson_trace, run_trace  # noqa: F401
-from .engine import InferenceEngine  # noqa: F401
+from .chaos import ChaosConfig, chaos_report, run_chaos  # noqa: F401
+from .engine import EngineStuckError, InferenceEngine  # noqa: F401
 from .kv_pages import (  # noqa: F401
     ContinuousKVCache,
     PagedKVCacheManager,
     init_paged_caches,
 )
-from .scheduler import Request, Scheduler  # noqa: F401
+from .scheduler import (  # noqa: F401
+    OUTCOMES,
+    Request,
+    Scheduler,
+    ShedError,
+)

@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.engine import InferenceEngine
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import Request, ShedError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,8 +33,20 @@ class ServingAPI:
     def __init__(self, engine: InferenceEngine):
         self.engine = engine
 
-    def submit(self, prompt, max_new: int, eos_id: Optional[int] = None) -> int:
-        return self.engine.submit(prompt, max_new, eos_id=eos_id)
+    def submit(self, prompt, max_new: int, eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request; ``deadline_s`` is a TTL relative to now
+        (outcome=timeout once it passes).  Raises ShedError when the
+        bounded admission queue is full."""
+        return self.engine.submit(prompt, max_new, eos_id=eos_id,
+                                  deadline_s=deadline_s)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued, prefilling, or decoding request: pages release
+        (shared prefix pages stay warm), the request retires with
+        outcome=cancelled and surfaces via collect().  False when rid is
+        unknown or already retired."""
+        return self.engine.cancel(rid)
 
     def step(self) -> int:
         return self.engine.step()
@@ -172,7 +184,10 @@ def run_trace(engine: InferenceEngine, trace: List[TraceItem],
         if step_idx >= max_steps:
             raise RuntimeError(f"trace incomplete after {max_steps} steps")
         while i < len(pending) and pending[i].arrival_step <= step_idx:
-            engine.submit(pending[i].prompt, pending[i].max_new)
+            try:
+                engine.submit(pending[i].prompt, pending[i].max_new)
+            except ShedError:
+                pass     # shed requests still retire through collect()
             i += 1
         engine.step()
         finished.extend(engine.collect())

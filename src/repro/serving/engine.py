@@ -40,7 +40,9 @@ traced path: telemetry on vs off is token-identical by construction.
 
 from __future__ import annotations
 
+import dataclasses
 import time
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -49,6 +51,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, Runtime, ServingConfig
 from repro.core.quant_plan import pack_for_serving
+from repro.distributed.fault_tolerance import StepDeadlineExceeded, Watchdog
 from repro.kernels import autotune
 from repro.launch.steps import make_ragged_step, make_serving_steps
 from repro.observability import COUNT_BUCKETS, Telemetry
@@ -62,7 +65,35 @@ from repro.serving.kv_pages import (
     with_block_tables,
     with_token_slots,
 )
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import (
+    CANCELLED,
+    ERROR,
+    OK,
+    SHED,
+    TIMEOUT,
+    Request,
+    Scheduler,
+    ShedError,
+)
+
+
+class EngineStuckError(RuntimeError):
+    """run_until_idle() exhausted its step budget with work still queued or
+    running — a wedged engine must be loud, not a silent return.  Carries
+    the stuck state so an operator (or the chaos harness) can see *what*
+    is wedged without re-running under a debugger."""
+
+    def __init__(self, max_steps: int, queued, running,
+                 pool_in_use: int, pool_pages: int):
+        self.max_steps = max_steps
+        self.queued = list(queued)
+        self.running = list(running)
+        self.pool_in_use = pool_in_use
+        self.pool_pages = pool_pages
+        super().__init__(
+            f"engine not idle after {max_steps} steps: "
+            f"queued rids {self.queued}, running rids {self.running}, "
+            f"pool {pool_in_use}/{pool_pages} pages in use")
 
 
 def build_params(cfg: ArchConfig, rt: Runtime, seed: int = 0):
@@ -90,7 +121,6 @@ class InferenceEngine:
                  telemetry: Optional[Telemetry] = None):
         # continuous batching puts rows at different positions: cache writes
         # must scatter per-row, never assume step-aligned DUS
-        import dataclasses
         rt = dataclasses.replace(rt, aligned_decode=False)
         blocks = tuple(cfg.pattern) + tuple(cfg.tail)
         # SSM/LRU state integrates every input token, so left-padded prefill
@@ -139,7 +169,17 @@ class InferenceEngine:
             self.caches = init_caches(cfg, rt, batch=sv.max_batch,
                                       seq=sv.max_ctx)
         self.scheduler = Scheduler(self.kv, sv.max_batch,
-                                   metrics=self.metrics)
+                                   metrics=self.metrics,
+                                   max_queue=sv.max_queue)
+        # step watchdog (ServingConfig.step_deadline_s): a hung or
+        # straggling step becomes a counter, and an exception in strict
+        # mode — the same Watchdog the training loop arms
+        self._watchdog = (Watchdog(sv.step_deadline_s)
+                          if sv.step_deadline_s > 0 else None)
+        # chaos hook: an exception planted here is raised at the top of the
+        # next step(), before any state mutation, so a retry wrapper
+        # (distributed.fault_tolerance.run_with_retries) sees a clean retry
+        self._inject_fault: Optional[Exception] = None
         # tuned (bm, bn, bk) tiles for every prefill/decode GEMM and for the
         # fused paged-attention kernels: qdense and kernels.ops resolve
         # blocks through kernels.autotune at trace time, so loading the
@@ -188,20 +228,57 @@ class InferenceEngine:
 
     # -------------------------------------------------------------- api --
     def submit(self, prompt, max_new: int, arrival: Optional[float] = None,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request.  ``deadline_s`` is a TTL relative to now: the
+        step-boundary sweep retires the request with outcome=timeout once
+        it passes, whether it is still queued or mid-decode.  Raises a
+        typed ``ShedError`` when the bounded admission queue
+        (``ServingConfig.max_queue``) is full — the retired request is
+        still collectable with outcome=shed."""
         rid = self._next_rid
         self._next_rid += 1
         now = self.clock()
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
                       max_new=max_new,
                       arrival=now if arrival is None else arrival,
-                      eos_id=eos_id)
+                      eos_id=eos_id,
+                      deadline=(now + deadline_s
+                                if deadline_s is not None else None))
         req.t_visible = now
         self._all[rid] = req
-        self.scheduler.submit(req)
+        try:
+            self.scheduler.submit(req)
+        except ShedError:
+            req.state, req.outcome, req.t_finish = "finished", SHED, now
+            self._finished.append(req)
+            self._observe_retire(req)
+            raise
+        except ValueError:
+            # capacity validation failure: a typed `error` retirement, so
+            # the outcome taxonomy covers rejected-as-malformed too
+            req.state, req.outcome, req.t_finish = "finished", ERROR, now
+            self._finished.append(req)
+            self._observe_retire(req)
+            raise
         self.metrics.counter("requests_submitted_total",
                              "requests accepted into the queue").inc()
         return rid
+
+    def cancel(self, rid: int, outcome: str = CANCELLED) -> bool:
+        """Cancel a queued, prefilling, or decoding request.  Its
+        refcounted pages are released (shared prefix pages stay warm in the
+        pool), the batch slot frees at this step boundary, and the request
+        retires with the given outcome, collectable via collect().
+        Returns False when rid is unknown or already retired."""
+        req = self._all.get(rid)
+        if req is None or req.t_finish is not None:
+            return False
+        retired = self.scheduler.cancel(rid, self.clock(), outcome)
+        if retired is None:
+            return False
+        self._finish_aborted(retired)
+        return True
 
     def collect(self) -> List[Request]:
         out, self._finished = self._finished, []
@@ -284,11 +361,49 @@ class InferenceEngine:
         self._warm_ragged()
         self.tm.jit_watch.absorb("ragged")
 
+    def inject_step_fault(self, exc: Exception) -> None:
+        """Chaos hook: raise `exc` at the top of the next step(), before
+        any scheduler/pool mutation — so wrapping step() in
+        ``run_with_retries`` retries against unchanged state."""
+        self._inject_fault = exc
+
     def step(self) -> int:
         """One decode-step boundary; returns the number of running requests
-        after the step (0 = idle)."""
-        if self._ragged is not None:
-            return self._step_ragged()
+        after the step (0 = idle).
+
+        Lifecycle work happens here, outside the jit'd bodies: injected
+        faults fire before any mutation (clean retries), the deadline sweep
+        retires overdue requests with outcome=timeout before admission can
+        spend pages on them, and the optional step watchdog
+        (``ServingConfig.step_deadline_s``) turns a hung/straggling step
+        into a counter — or a typed ``StepDeadlineExceeded`` in strict
+        mode.  All of it is host-side: the donated single-signature jits
+        and the zero-steady-state-recompile guarantee are untouched."""
+        if self._inject_fault is not None:
+            exc, self._inject_fault = self._inject_fault, None
+            raise exc
+        for req in self.scheduler.expire(self.clock()):
+            self._finish_aborted(req)
+        wd = self._watchdog
+        if wd is not None:
+            wd.arm()
+        try:
+            n = (self._step_ragged() if self._ragged is not None
+                 else self._step_bucketed())
+        finally:
+            if wd is not None:
+                wd.disarm()
+        if wd is not None and wd.fired.is_set():
+            self.metrics.counter(
+                "serving_step_deadline_exceeded_total",
+                "engine steps that overran the watchdog deadline").inc()
+            if self.sv.step_deadline_strict:
+                raise StepDeadlineExceeded(
+                    f"serving step {self.n_steps - 1} exceeded "
+                    f"{self.sv.step_deadline_s:.3f}s deadline")
+        return n
+
+    def _step_bucketed(self) -> int:
         t0 = time.perf_counter()
         tt0 = self.trace.now()
         now = self.clock()
@@ -486,30 +601,58 @@ class InferenceEngine:
             if req.done:
                 self.scheduler.finish(req, now)
                 self._finished.append(req)
-                self._observe_finish(req)
+                self._observe_retire(req)
 
-    def _observe_finish(self, req: Request) -> None:
-        """Per-request latency telemetry, recorded the moment the request
-        retires (t_finish just stamped): TTFT, mean inter-token latency,
-        end-to-end latency — the histograms the SLO scheduler and
-        autoscaling signal (ROADMAP item 3) will consume."""
+    def _finish_aborted(self, req: Request) -> None:
+        """Land a scheduler-aborted request (cancel, deadline expiry) in the
+        collect() queue with its outcome telemetry — the same retirement
+        path a clean finish takes, minus scheduler.finish (the scheduler
+        already evicted it)."""
+        self._finished.append(req)
+        self._observe_retire(req)
+
+    def _observe_retire(self, req: Request) -> None:
+        """Per-request retirement telemetry, recorded the moment t_finish is
+        stamped.  Latency histograms and the retire counter carry the typed
+        ``outcome`` label (ok|cancelled|timeout|shed|error) so dashboards
+        separate clean finishes from lifecycle aborts without a second
+        registry; ``requests_finished_total`` stays ok-only (it means what
+        it always meant).  TTFT/ITL — the histograms the SLO scheduler and
+        autoscaling signal (ROADMAP item 3) will consume — record for any
+        outcome that got far enough to have the timestamps."""
         m = self.metrics
-        m.counter("requests_finished_total", "requests fully decoded").inc()
+        out = req.outcome or ERROR
+        m.counter("requests_retired_total", "requests retired, any outcome",
+                  outcome=out).inc()
+        if out == OK:
+            m.counter("requests_finished_total",
+                      "requests fully decoded").inc()
+        elif out == CANCELLED:
+            m.counter("serving_cancelled_total",
+                      "requests cancelled before finishing").inc()
+        elif out == TIMEOUT:
+            m.counter("serving_timeout_total",
+                      "requests retired past their deadline").inc()
+        elif out == SHED:
+            m.counter("serving_shed_total",
+                      "requests shed by the bounded admission queue").inc()
         m.histogram("request_latency_us",
-                    "submit-to-finish wall time").observe(
+                    "submit-to-retire wall time", outcome=out).observe(
                         (req.t_finish - req.t_visible) * 1e6)
         if req.t_first is not None:
-            m.histogram("ttft_us", "time to first token").observe(
-                (req.t_first - req.t_visible) * 1e6)
+            m.histogram("ttft_us", "time to first token",
+                        outcome=out).observe(
+                            (req.t_first - req.t_visible) * 1e6)
             if len(req.tokens) > 1:
                 m.histogram("itl_us",
-                            "mean inter-token latency per request").observe(
+                            "mean inter-token latency per request",
+                            outcome=out).observe(
                                 (req.t_finish - req.t_first) * 1e6
                                 / (len(req.tokens) - 1))
         seg = self._seg.pop(req.rid, None)
         if seg is not None:
             self.trace.complete(f"r{req.rid}", 1 + seg[1], seg[0],
-                                rid=req.rid, outcome="finished",
+                                rid=req.rid, outcome=out,
                                 gen=len(req.tokens),
                                 preempts=req.n_preempts)
 
@@ -517,7 +660,15 @@ class InferenceEngine:
         for _ in range(max_steps):
             if self.step() == 0 and self.scheduler.idle:
                 return
-        raise RuntimeError(f"not idle after {max_steps} steps")
+        self.metrics.counter(
+            "serving_engine_stuck_total",
+            "run_until_idle step-budget exhaustions").inc()
+        raise EngineStuckError(
+            max_steps,
+            [r.rid for r in self.scheduler.waiting],
+            list(self.scheduler.running),
+            getattr(self.kv, "in_use", 0),
+            self.sv.num_pages if self.sv.layout == "paged" else 0)
 
     # -------------------------------------------------------- internals --
     def _observe_packing(self, used: int, capacity: int) -> None:
@@ -686,6 +837,110 @@ class InferenceEngine:
                 self.kv.register_upto(req.rid, req.prefix, req.n_cached)
         self.n_decode_tokens += n
 
+    # ------------------------------------------------------- stop/resume --
+    def snapshot(self) -> Dict:
+        """Freeze the engine at a step boundary: every request's progress,
+        the scheduler's queues/slots, the page pool's full bookkeeping, the
+        device KV pool and block tables (pulled to host numpy), and the
+        engine counters.  `InferenceEngine.restore(snap)` builds a fresh
+        engine that continues *bit-identically* — restored requests emit
+        exactly the tokens the uninterrupted run would have (the device
+        pool is captured verbatim, so nothing is recomputed).
+
+        Call between steps (never from inside a step callback).  The dict
+        is in-memory/same-process state: config objects are held by
+        reference and the prefix index carries Python content hashes, which
+        are only stable across processes with PYTHONHASHSEED pinned — to
+        persist across processes, pickle it from a pinned interpreter."""
+        def _req(req: Request) -> Dict:
+            d = {f.name: getattr(req, f.name)
+                 for f in dataclasses.fields(Request)}
+            d["prompt"] = np.array(d["prompt"], np.int32)
+            d["tokens"] = list(d["tokens"])
+            return d
+
+        sch = self.scheduler
+        return {
+            "cfg": self.cfg, "rt": self.rt, "sv": self.sv,
+            "requests": {rid: _req(r) for rid, r in self._all.items()},
+            "finished": [r.rid for r in self._finished],
+            "waiting": [r.rid for r in sch.waiting],
+            "running": list(sch.running),          # insertion order
+            "free_slots": list(sch._free_slots),   # heap layout, verbatim
+            "admit_counter": sch._admit_counter,
+            "n_preemptions": sch.n_preemptions,
+            "kv": self.kv.state(),
+            "caches": jax.tree.map(np.asarray, self.caches),
+            "tbl": np.asarray(self._tbl),
+            "budget": self._budget if self._ragged is not None else None,
+            "next_rid": self._next_rid,
+            "counters": {
+                "n_steps": self.n_steps,
+                "n_decode_tokens": self.n_decode_tokens,
+                "n_prefill_tokens": self.n_prefill_tokens,
+                "n_prefix_hit_tokens": self.n_prefix_hit_tokens,
+                "n_tokens_packed": self.n_tokens_packed,
+                "n_tokens_wasted": self.n_tokens_wasted,
+                "t_start": self.t_start,
+            },
+        }
+
+    @classmethod
+    def restore(cls, snap: Dict, params=None, seed: int = 0,
+                clock=time.time, telemetry: Optional[Telemetry] = None
+                ) -> "InferenceEngine":
+        """Build an engine from a `snapshot()` and resume where it stopped.
+        Weights are NOT in the snapshot — pass the same `params` (or the
+        same `seed`, which re-inits them deterministically).  The restored
+        engine's step functions are fresh jits: their first calls compile
+        (first-seen shapes, counted as compiles), but the zero
+        steady-state-recompile guarantee holds from there."""
+        eng = cls(snap["cfg"], snap["rt"], snap["sv"], params=params,
+                  seed=seed, clock=clock, telemetry=telemetry)
+        eng._load_snapshot(snap)
+        return eng
+
+    def _load_snapshot(self, snap: Dict) -> None:
+        reqs: Dict[int, Request] = {}
+        for rid, d in snap["requests"].items():
+            d = dict(d)
+            d["prompt"] = np.array(d["prompt"], np.int32)
+            d["tokens"] = list(d["tokens"])
+            reqs[rid] = Request(**d)
+        self._all = reqs
+        self._finished = [reqs[r] for r in snap["finished"]]
+        sch = self.scheduler
+        sch.waiting = deque(reqs[r] for r in snap["waiting"])
+        sch.running = {r: reqs[r] for r in snap["running"]}
+        sch._free_slots = list(snap["free_slots"])
+        sch._admit_counter = snap["admit_counter"]
+        sch.n_preemptions = snap["n_preemptions"]
+        self.kv.load_state(snap["kv"])
+        if self._ragged is not None and snap["budget"] is not None \
+                and snap["budget"] != self._budget:
+            # match the source engine's (possibly grown) budget so the plan
+            # packs identically; the signature compiles on first use
+            self._budget = snap["budget"]
+        self.caches = jax.tree.map(jnp.asarray, snap["caches"])
+        self._strip_tables()
+        if self.sv.layout == "paged":
+            self._tbl = jnp.asarray(snap["tbl"])
+            # empty version map => _sync_tables re-uploads rows for running
+            # requests on their next batch; correct either way, since
+            # versions key on (slot, page ids)
+            self._tbl_ver = {}
+        self._next_rid = snap["next_rid"]
+        c = snap["counters"]
+        self.n_steps = c["n_steps"]
+        self.n_decode_tokens = c["n_decode_tokens"]
+        self.n_prefill_tokens = c["n_prefill_tokens"]
+        self.n_prefix_hit_tokens = c["n_prefix_hit_tokens"]
+        self.n_tokens_packed = self._last_packed = c["n_tokens_packed"]
+        self.n_tokens_wasted = self._last_wasted = c["n_tokens_wasted"]
+        self.t_start = c["t_start"]
+        sch.check_invariants()
+        self.kv.check_invariants()
+
     # ----------------------------------------------------------- profile --
     def profile(self, reps: int = 3) -> Dict:
         """Attribute one full-context decode step's cost: the whole jit'd
@@ -833,7 +1088,14 @@ class InferenceEngine:
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> Dict:
-        done = [r for r in self._all.values() if r.t_finish is not None]
+        retired = [r for r in self._all.values() if r.t_finish is not None]
+        # latency aggregates describe *clean* finishes only — a storm of
+        # instantly-cancelled requests must not drag p50 toward zero
+        done = [r for r in retired if r.outcome == OK]
+        outcomes: Dict[str, int] = {}
+        for r in retired:
+            out = r.outcome or ERROR
+            outcomes[out] = outcomes.get(out, 0) + 1
         lat = [r.t_finish - r.t_visible for r in done]
         # `is not None`, not truthiness: a t_first of exactly 0.0 (fake
         # clocks, epoch-zero traces) is a real first-token time
@@ -856,6 +1118,8 @@ class InferenceEngine:
             "token_utilization": (self.n_tokens_packed / capacity
                                   if capacity else None),
             "requests_finished": len(done),
+            "requests_retired": len(retired),
+            "outcomes": outcomes,
             "requests_preempted": self.scheduler.n_preemptions,
             "steps": self.n_steps,
             "prefill_tokens": self.n_prefill_tokens,

@@ -331,6 +331,11 @@ class PagedKVCacheManager:
         self.n_lookups = 0
         self.n_hit_tokens = 0
         self.n_evictions = 0
+        # chaos hook (serving/chaos.py): the next N admissions that would
+        # allocate pages report capacity failure instead — exercising the
+        # all-or-nothing admission path without real pool pressure.  Host-
+        # side only; never touches device state.
+        self.fail_next_admits = 0
 
     # -- capacity ---------------------------------------------------------
     @property
@@ -443,6 +448,14 @@ class PagedKVCacheManager:
         assert rid not in self.pages, f"rid {rid} already holds pages"
         if n_tokens > self.sv.max_ctx:
             return None
+        if self.fail_next_admits:
+            # injected allocator failure: behave exactly like a capacity
+            # miss — nothing held, nothing counted, the request waits
+            self.fail_next_admits -= 1
+            self.metrics.counter(
+                "chaos_alloc_failures_total",
+                "admissions failed by the chaos allocator hook").inc()
+            return None
         shared, h = self._match(tokens) if self.sv.prefix_cache \
             else ([], _HASH_SEED)
         # shared pages currently warm stop being allocatable once held
@@ -505,6 +518,83 @@ class PagedKVCacheManager:
         row[: len(have)] = have
         return row
 
+    # -- invariants --------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Allocator invariants, assertable after any event.  This is the
+        single checker shared by the hypothesis allocator property test and
+        the chaos harness:
+
+          * blank / warm / in-use partition the pool exactly once
+          * refcounts are >= 1 and equal the per-request ownership multiset
+          * ``available`` + sum of 1/refcount ownership shares == pool size
+          * no request holds the same page twice
+          * only registered (sealed, immutable) pages are ever shared
+          * warm pages are exactly the registered refcount-0 pages
+          * index and page_hash are inverse maps
+        """
+        blank, warm = set(self.blank), set(self.warm)
+        in_use = set(self.refcount)
+        assert len(blank) == len(self.blank), "blank list holds duplicates"
+        assert not (blank & warm) and not (blank & in_use) \
+            and not (warm & in_use), "pool state overlap"
+        assert blank | warm | in_use == set(range(self.sv.num_pages)), \
+            "pool partition incomplete"
+        assert all(c >= 1 for c in self.refcount.values())
+        shares = sum(1.0 / self.refcount[p]
+                     for pages in self.pages.values() for p in pages)
+        assert abs(self.available + shares - self.sv.num_pages) < 1e-9, \
+            "ownership shares + free pages != pool"
+        owners: Dict[int, int] = {}
+        for rid, pages in self.pages.items():
+            assert len(set(pages)) == len(pages), \
+                f"rid {rid} holds a page twice"
+            for p in pages:
+                owners[p] = owners.get(p, 0) + 1
+        assert owners == self.refcount, "refcounts disagree with ownership"
+        for p, c in self.refcount.items():
+            if c > 1:
+                assert p in self.page_hash, f"unsealed page {p} shared"
+        assert all(p in self.page_hash for p in warm), \
+            "warm page lost its registration"
+        assert self.index == {h: p for p, h in self.page_hash.items()}, \
+            "index/page_hash out of sync"
+
+    # -- snapshot ----------------------------------------------------------
+    def state(self) -> Dict:
+        """Host-side allocator state for engine.snapshot(): everything
+        needed to resume page accounting exactly.  Note the prefix-index
+        keys are Python hashes — stable within a process (the chaos
+        stop/resume path), but a snapshot restored in a *different* process
+        needs PYTHONHASHSEED pinned for warm-page hits to survive; shared
+        in-use page structure restores correctly regardless."""
+        return {
+            "blank": list(self.blank),
+            "warm": list(self.warm),
+            "pages": {rid: list(p) for rid, p in self.pages.items()},
+            "refcount": dict(self.refcount),
+            "index": dict(self.index),
+            "page_hash": dict(self.page_hash),
+            "chain": dict(self._chain),
+            "high_water": self.high_water,
+            "n_lookups": self.n_lookups,
+            "n_hit_tokens": self.n_hit_tokens,
+            "n_evictions": self.n_evictions,
+        }
+
+    def load_state(self, st: Dict) -> None:
+        self.blank = deque(st["blank"])
+        self.warm = OrderedDict((p, None) for p in st["warm"])
+        self.pages = {rid: list(p) for rid, p in st["pages"].items()}
+        self.refcount = dict(st["refcount"])
+        self.index = dict(st["index"])
+        self.page_hash = dict(st["page_hash"])
+        self._chain = dict(st["chain"])
+        self.high_water = st["high_water"]
+        self.n_lookups = st["n_lookups"]
+        self.n_hit_tokens = st["n_hit_tokens"]
+        self.n_evictions = st["n_evictions"]
+        self.check_invariants()
+
 
 class ContinuousKVCache:
     """The contiguous (static-slot) layout behind the same manager interface:
@@ -546,3 +636,12 @@ class ContinuousKVCache:
 
     def table_row(self, rid: int) -> Optional[np.ndarray]:
         return None
+
+    def check_invariants(self) -> None:
+        pass                       # nothing allocated, nothing to violate
+
+    def state(self) -> Dict:
+        return {}
+
+    def load_state(self, st: Dict) -> None:
+        pass

@@ -34,6 +34,18 @@ from repro.observability.metrics import NULL_REGISTRY
 
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
 
+# terminal request outcomes: every retired request carries exactly one
+OK, CANCELLED, TIMEOUT, SHED, ERROR = \
+    "ok", "cancelled", "timeout", "shed", "error"
+OUTCOMES = (OK, CANCELLED, TIMEOUT, SHED, ERROR)
+
+
+class ShedError(RuntimeError):
+    """Typed load-shedding rejection: the bounded admission queue
+    (``ServingConfig.max_queue``) is full.  The request was never queued;
+    backpressure belongs to the caller (retry, spill to another replica,
+    or surface a 429)."""
+
 
 @dataclasses.dataclass
 class Request:
@@ -42,8 +54,12 @@ class Request:
     max_new: int
     arrival: float = 0.0                # engine-clock time the request exists
     eos_id: Optional[int] = None
+    deadline: Optional[float] = None    # absolute engine-clock deadline; the
+                                        # step-boundary sweep retires overdue
+                                        # requests with outcome=timeout
     # -- runtime state ----------------------------------------------------
     state: str = WAITING
+    outcome: Optional[str] = None       # one of OUTCOMES once retired
     slot: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)  # generated
     n_cached: int = 0                   # tokens written to the KV cache
@@ -78,9 +94,13 @@ class Scheduler:
     """Owns the waiting queue and the running set; talks to a KV manager
     (PagedKVCacheManager or ContinuousKVCache) for capacity decisions."""
 
-    def __init__(self, kv_manager, max_batch: int, metrics=None):
+    def __init__(self, kv_manager, max_batch: int, metrics=None,
+                 max_queue: int = 0):
         self.kv = kv_manager
         self.max_batch = max_batch
+        # bounded admission queue: submit() sheds (typed ShedError) once
+        # this many requests wait; 0 = unbounded (the pre-hardening default)
+        self.max_queue = max_queue
         # telemetry registry (observability.metrics): admission / resume /
         # preemption counters land here; queue-depth and running-set gauges
         # are sampled by the engine at step boundaries
@@ -99,6 +119,10 @@ class Scheduler:
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new} exceeds serving capacity "
                 f"({self.kv.capacity_desc()})")
+        if self.max_queue and len(self.waiting) >= self.max_queue:
+            raise ShedError(
+                f"request {req.rid}: admission queue full "
+                f"({self.max_queue} waiting) — shedding")
         self.waiting.append(req)
 
     # -------------------------------------------------------- admission --
@@ -114,17 +138,26 @@ class Scheduler:
         preempt→resume re-prefill just the uncached suffix, since a
         victim's registered pages outlive its release.  Admission is
         all-or-nothing: a request that doesn't fit leaves no holds, no
-        counter bumps, and no LRU churn behind."""
+        counter bumps, and no LRU churn behind.
+
+        Deadline awareness: requests carrying a deadline are considered
+        earliest-deadline-first, ahead of the deadline-less FIFO tail — the
+        request whose SLO is most at risk gets the next free slot.  The
+        ordering depends only on (deadline, queue position), both replayed
+        identically across engines, so determinism of the compare harness
+        is preserved; with no deadlines in play the order is exactly the
+        old FIFO."""
         admitted = []
-        while self.waiting and self._free_slots:
-            req = self.waiting[0]
-            if req.arrival > now:
+        for req in self._admission_order():
+            if not self._free_slots:
                 break
+            if req.arrival > now:
+                continue                # not arrived yet; others may have
             prefix = req.prefix
             hit = self.kv.admit_request(req.rid, prefix, len(prefix) + 1)
             if hit is None:
-                break
-            self.waiting.popleft()
+                break                   # capacity-blocked head: no skip-ahead
+            self.waiting.remove(req)
             req.n_cached = hit
             req.decoding = False
             req.slot = heapq.heappop(self._free_slots)
@@ -142,12 +175,71 @@ class Scheduler:
                     "admissions of previously-preempted requests").inc()
         return admitted
 
+    def _admission_order(self) -> List[Request]:
+        """Deadline-carrying waiters earliest-deadline-first, then the rest
+        in queue position (preemption victims appendleft, so they keep
+        resuming before new arrivals)."""
+        if not any(r.deadline is not None for r in self.waiting):
+            return list(self.waiting)                # pure FIFO, no sort
+        pos = {id(r): i for i, r in enumerate(self.waiting)}
+        return sorted(self.waiting,
+                      key=lambda r: ((0, r.deadline) if r.deadline is not None
+                                     else (1, 0.0), pos[id(r)]))
+
+    # ---------------------------------------------------- cancel / expire --
+    def _evict_running(self, req: Request) -> None:
+        """Take a running request out of the batch, releasing its pages
+        (refcounted — shared prefix pages stay warm and hittable) and its
+        batch slot."""
+        self.kv.release(req.rid)
+        heapq.heappush(self._free_slots, req.slot)
+        del self.running[req.rid]
+        req.slot = -1
+
+    def _retire_aborted(self, req: Request, now: float, outcome: str) -> None:
+        req.state = FINISHED
+        req.outcome = outcome
+        req.t_finish = now
+
+    def cancel(self, rid: int, now: float,
+               outcome: str = CANCELLED) -> Optional[Request]:
+        """Abort a queued or running request.  Queued requests simply leave
+        the waiting deque; running ones release their pages and slot like a
+        preemption that never resumes.  Returns the retired request, or
+        None when rid is unknown to the scheduler (already finished)."""
+        for req in self.waiting:
+            if req.rid == rid:
+                self.waiting.remove(req)
+                self._retire_aborted(req, now, outcome)
+                return req
+        req = self.running.get(rid)
+        if req is None:
+            return None
+        self._evict_running(req)
+        self._retire_aborted(req, now, outcome)
+        return req
+
+    def expire(self, now: float) -> List[Request]:
+        """Deadline sweep at a step boundary: retire every waiting or
+        running request whose absolute deadline has passed with
+        outcome=timeout (running victims release pages like a cancel).
+        Returns the expired requests so the engine can observe them."""
+        expired = []
+        for req in [r for r in self.waiting
+                    if r.deadline is not None and r.deadline <= now]:
+            self.waiting.remove(req)
+            self._retire_aborted(req, now, TIMEOUT)
+            expired.append(req)
+        for req in [r for r in self.running.values()
+                    if r.deadline is not None and r.deadline <= now]:
+            self._evict_running(req)
+            self._retire_aborted(req, now, TIMEOUT)
+            expired.append(req)
+        return expired
+
     # -------------------------------------------------------- preemption --
     def _preempt(self, victim: Request) -> None:
-        self.kv.release(victim.rid)
-        heapq.heappush(self._free_slots, victim.slot)
-        del self.running[victim.rid]
-        victim.slot = -1
+        self._evict_running(victim)
         victim.state = WAITING
         # n_cached is re-derived at admission (admit_request): a victim
         # whose registered pages survive in the warm pool re-admits at its
@@ -180,11 +272,9 @@ class Scheduler:
 
     # ------------------------------------------------------------ finish --
     def finish(self, req: Request, now: float) -> None:
-        self.kv.release(req.rid)
-        heapq.heappush(self._free_slots, req.slot)
-        del self.running[req.rid]
-        req.slot = -1
+        self._evict_running(req)
         req.state = FINISHED
+        req.outcome = OK
         req.t_finish = now
 
     # ------------------------------------------------------------- batch --
@@ -223,3 +313,39 @@ class Scheduler:
     @property
     def idle(self) -> bool:
         return not self.waiting and not self.running
+
+    # -------------------------------------------------------- invariants --
+    def check_invariants(self) -> None:
+        """Structural scheduler invariants, assertable after any event (the
+        chaos harness and the allocator property test call this after every
+        step/cancel/expire/preempt):
+
+          * running slots are unique, in range, and together with the free
+            heap partition [0, max_batch)
+          * waiting and running sets are disjoint; states match membership
+          * every running request's cached tokens are covered by its page
+            allocation; waiting requests hold no pages
+        """
+        slots = [r.slot for r in self.running.values()]
+        assert len(set(slots)) == len(slots), f"duplicate slots {slots}"
+        free = set(self._free_slots)
+        assert len(free) == len(self._free_slots), "duplicate free slots"
+        assert free | set(slots) == set(range(self.max_batch)), \
+            f"slot partition broken: free={free} running={slots}"
+        w_rids = [r.rid for r in self.waiting]
+        assert len(set(w_rids)) == len(w_rids), "rid queued twice"
+        assert not set(w_rids) & set(self.running), \
+            "rid both waiting and running"
+        pages = getattr(self.kv, "pages", None)
+        for req in self.waiting:
+            assert req.state == WAITING, (req.rid, req.state)
+            if pages is not None:
+                assert req.rid not in pages, \
+                    f"waiting rid {req.rid} still holds pages"
+        for req in self.running.values():
+            assert req.state == RUNNING, (req.rid, req.state)
+            if pages is not None:
+                assert (self.kv.pages_for(req.n_cached)
+                        <= len(pages.get(req.rid, []))), \
+                    f"rid {req.rid} cached {req.n_cached} tokens beyond " \
+                    f"its {len(pages.get(req.rid, []))}-page allocation"

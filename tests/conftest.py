@@ -2,7 +2,7 @@
 
 The container may lack `hypothesis`; the property tests only use a small,
 well-defined slice of its API (given/settings + sampled_from / integers /
-floats / lists / .map).  When the real package is missing we register a
+floats / tuples / lists / .map).  When the real package is missing we register a
 deterministic mini-implementation under the same module name so the
 properties still execute with seeded example streams instead of being
 skipped wholesale.
@@ -48,6 +48,9 @@ def _install_hypothesis_shim():
         return _Strategy(
             lambda rng: float(rng.uniform(min_value, max_value)))
 
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
     def lists(elements, min_size=0, max_size=16):
         def draw(rng):
             n = int(rng.integers(min_size, max_size + 1))
@@ -85,6 +88,7 @@ def _install_hypothesis_shim():
     strategies.sampled_from = sampled_from
     strategies.integers = integers
     strategies.floats = floats
+    strategies.tuples = tuples
     strategies.lists = lists
     mod.strategies = strategies
     sys.modules["hypothesis"] = mod

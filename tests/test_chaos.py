@@ -1,0 +1,297 @@
+"""Request-lifecycle hardening: cancellation, deadlines, load shedding,
+stop/resume, the step watchdog, and the seeded chaos harness.
+
+The scheduler-level tests drive Scheduler + PagedKVCacheManager directly
+(no model, fast); the engine-level tests run the reduced config end to end
+so cancel/timeout/shed retirements, snapshot/restore token identity, and
+the fault-injection paths are exercised against real jitted steps.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import Runtime, ServingConfig, get_config
+from repro.distributed.fault_tolerance import (
+    StepDeadlineExceeded,
+    run_with_retries,
+)
+from repro.serving.chaos import ChaosConfig, InjectedFault, _StepClock, run_chaos
+from repro.serving.engine import (
+    EngineStuckError,
+    InferenceEngine,
+    build_params,
+)
+from repro.serving.kv_pages import PagedKVCacheManager
+from repro.serving.scheduler import (
+    CANCELLED,
+    OK,
+    Request,
+    Scheduler,
+    SHED,
+    ShedError,
+    TIMEOUT,
+)
+
+RT = Runtime(quant_backend="float", cache_dtype="bfloat16", remat="none",
+             loss_chunk=0)
+
+
+# ---------------------------------------------------- scheduler unit tests --
+def _sched(max_queue=0, num_pages=16):
+    sv = ServingConfig(layout="paged", max_batch=2, page_size=4,
+                       num_pages=num_pages, max_ctx=16, max_queue=max_queue)
+    kv = PagedKVCacheManager(sv)
+    return kv, Scheduler(kv, max_batch=2, max_queue=max_queue)
+
+
+def _rq(rid, L=6, **kw):
+    return Request(rid=rid, prompt=np.arange(L, dtype=np.int32) + rid,
+                   max_new=4, **kw)
+
+
+def test_cancel_queued_request_leaves_no_trace():
+    kv, sched = _sched()
+    for rid in range(3):
+        sched.submit(_rq(rid))
+    sched.admit(0.0)                       # max_batch=2: rid 2 still queued
+    retired = sched.cancel(2, now=1.0)
+    assert retired is not None and retired.outcome == CANCELLED
+    assert retired.t_finish == 1.0
+    assert 2 not in kv.pages and not sched.waiting
+    kv.check_invariants()
+    sched.check_invariants()
+
+
+def test_cancel_running_releases_pages_and_slot():
+    kv, sched = _sched()
+    sched.submit(_rq(0))
+    sched.submit(_rq(1))
+    sched.admit(0.0)
+    held = len(kv.pages[0])
+    assert held > 0
+    in_use_before = kv.in_use
+    assert sched.cancel(0, now=1.0).outcome == CANCELLED
+    assert 0 not in kv.pages and kv.in_use < in_use_before
+    assert 0 not in sched.running and len(sched._free_slots) == 1
+    # unknown / already-retired rids are a no-op, not an error
+    assert sched.cancel(0, now=2.0) is None
+    assert sched.cancel(99, now=2.0) is None
+    kv.check_invariants()
+    sched.check_invariants()
+
+
+def test_expire_sweeps_waiting_and_running():
+    kv, sched = _sched()
+    for rid in range(3):
+        sched.submit(_rq(rid))
+    sched.admit(0.0)                       # FIFO: 0,1 running; 2 queued
+    sched.running[0].deadline = 5.0        # set post-admission so EDF
+    sched.waiting[0].deadline = 3.0        # doesn't reorder the batch
+    # rid 1 carries no deadline: never expires
+    assert sched.expire(2.9) == []
+    expired = sched.expire(5.0)            # sweeps both overdue requests
+    assert sorted(r.rid for r in expired) == [0, 2]
+    assert all(r.outcome == TIMEOUT for r in expired)
+    assert 0 not in kv.pages and 2 not in kv.pages
+    assert list(sched.running) == [1]
+    kv.check_invariants()
+    sched.check_invariants()
+
+
+def test_edf_admission_prefers_tightest_deadline():
+    kv, sched = _sched()
+    sched.submit(_rq(0))                   # FIFO head, but deadline-less
+    sched.submit(_rq(1, deadline=50.0))
+    sched.submit(_rq(2, deadline=10.0))
+    admitted = [r.rid for r in sched.admit(0.0)]
+    assert admitted == [2, 1]              # EDF ahead of the FIFO tail
+    assert [r.rid for r in sched.waiting] == [0]
+
+
+def test_bounded_queue_sheds_with_typed_error():
+    kv, sched = _sched(max_queue=1)
+    sched.submit(_rq(0))
+    with pytest.raises(ShedError):
+        sched.submit(_rq(1))
+    assert 1 not in kv.pages               # shed before holding anything
+    sched.admit(0.0)                       # queue drains -> submits succeed
+    sched.submit(_rq(2))
+    sched.check_invariants()
+
+
+# ------------------------------------------------------- engine e2e tests --
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("qwen2-0.5b").reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return build_params(cfg, RT)
+
+
+def _engine(cfg, params, clock=None, **sv_kw):
+    sv_args = dict(layout="paged", max_batch=2, page_size=8, num_pages=32,
+                   max_ctx=32)
+    sv_args.update(sv_kw)
+    kw = {"clock": clock} if clock is not None else {}
+    return InferenceEngine(cfg, RT, ServingConfig(**sv_args),
+                           params=params, **kw)
+
+
+def _prompt(cfg, L=8, shift=0):
+    return (np.arange(L, dtype=np.int32) * 3 + shift) % cfg.vocab
+
+
+def test_engine_cancel_queued_and_decoding(cfg, params):
+    eng = _engine(cfg, params)
+    eng.warmup([8])
+    r0 = eng.submit(_prompt(cfg), 6)
+    r1 = eng.submit(_prompt(cfg, shift=7), 6)
+    r2 = eng.submit(_prompt(cfg, shift=21), 6)   # max_batch=2: queued
+    eng.step()
+    eng.step()
+    assert eng.cancel(r0)                  # mid-decode
+    assert eng.cancel(r2)                  # still queued
+    assert not eng.cancel(r0)              # already retired: False, no raise
+    assert r0 not in eng.kv.pages and r2 not in eng.kv.pages
+    eng.run_until_idle()
+    fin = {r.rid: r for r in eng.collect()}
+    assert fin[r0].outcome == CANCELLED and fin[r2].outcome == CANCELLED
+    assert fin[r1].outcome == OK and len(fin[r1].tokens) == 6
+    assert eng.kv.in_use == 0
+    counters = eng.metrics.snapshot()["counters"]
+    assert counters["serving_cancelled_total"] == 2
+    assert counters['requests_retired_total{outcome="cancelled"}'] == 2
+    assert counters['requests_retired_total{outcome="ok"}'] == 1
+    assert eng.stats()["outcomes"] == {"ok": 1, "cancelled": 2}
+
+
+def test_engine_deadline_retires_with_timeout(cfg, params):
+    clock = _StepClock()
+    eng = _engine(cfg, params, clock=clock)
+    eng.warmup([8])
+    rid = eng.submit(_prompt(cfg), 20, deadline_s=3.0)
+    keep = eng.submit(_prompt(cfg, shift=5), 4)   # no deadline: unaffected
+    for t in range(8):
+        clock.t = float(t)
+        eng.step()
+    fin = {r.rid: r for r in eng.collect()}
+    assert fin[rid].outcome == TIMEOUT
+    assert 0 < len(fin[rid].tokens) < 20   # made progress, then expired
+    assert fin[keep].outcome == OK and len(fin[keep].tokens) == 4
+    assert eng.kv.in_use == 0
+    assert eng.metrics.snapshot()["counters"]["serving_timeout_total"] == 1
+
+
+def test_engine_shed_is_collectable(cfg, params):
+    eng = _engine(cfg, params, max_queue=1, max_batch=1)
+    eng.warmup([8])
+    r0 = eng.submit(_prompt(cfg), 4)
+    with pytest.raises(ShedError):
+        eng.submit(_prompt(cfg, shift=11), 4)
+    eng.run_until_idle()
+    fin = {r.rid: r for r in eng.collect()}
+    assert len(fin) == 2                   # the shed request still retires
+    assert fin[r0].outcome == OK
+    assert sorted(r.outcome for r in fin.values()) == [OK, SHED]
+    assert eng.metrics.snapshot()["counters"]["serving_shed_total"] == 1
+
+
+def test_snapshot_restore_token_identity(cfg, params):
+    prompts = [_prompt(cfg), _prompt(cfg, shift=13)]
+
+    def drain(eng, clock, step0, out):
+        step = step0
+        while not eng.scheduler.idle:
+            assert step < 200
+            clock.t = float(step)
+            eng.step()
+            for r in eng.collect():
+                out[r.rid] = list(r.tokens)
+            step += 1
+        return out
+
+    c_ref = _StepClock()
+    ref = _engine(cfg, params, clock=c_ref)
+    ref.warmup([8])
+    for p in prompts:
+        ref.submit(p, 8)
+    expect = drain(ref, c_ref, 0, {})
+
+    clock = _StepClock()
+    eng = _engine(cfg, params, clock=clock)
+    eng.warmup([8])
+    for p in prompts:
+        eng.submit(p, 8)
+    for step in range(3):                  # stop mid-decode
+        clock.t = float(step)
+        eng.step()
+    snap = eng.snapshot()
+    eng2 = InferenceEngine.restore(snap, params=params, clock=clock)
+    eng2.kv.check_invariants()
+    eng2.scheduler.check_invariants()
+    got = drain(eng2, clock, 3, {})
+    assert got == expect                   # bit-identical continuation
+    assert eng2.kv.in_use == 0
+
+
+def test_injected_step_fault_is_survivable(cfg, params):
+    eng = _engine(cfg, params)
+    eng.warmup([8])
+    rid = eng.submit(_prompt(cfg), 4)
+    eng.inject_step_fault(InjectedFault("boom"))
+    run_with_retries(eng.step, max_retries=2)   # first attempt raises
+    eng.run_until_idle()
+    fin = {r.rid: r for r in eng.collect()}
+    assert fin[rid].outcome == OK and len(fin[rid].tokens) == 4
+    # undecorated, the planted fault escapes (typed, so tests can tell)
+    eng.inject_step_fault(InjectedFault("boom2"))
+    with pytest.raises(InjectedFault):
+        eng.step()
+
+
+def test_watchdog_counts_and_strict_raises(cfg, params):
+    eng = _engine(cfg, params, step_deadline_s=1e-6)
+    eng.warmup([8])
+    eng.submit(_prompt(cfg), 3)
+    eng.run_until_idle()                   # lenient: counts, never raises
+    c = eng.metrics.snapshot()["counters"]
+    assert c["serving_step_deadline_exceeded_total"] >= 1
+    assert {r.outcome for r in eng.collect()} == {OK}
+
+    strict = _engine(cfg, params, step_deadline_s=1e-6,
+                     step_deadline_strict=True)
+    strict.warmup([8])
+    strict.submit(_prompt(cfg), 3)
+    with pytest.raises(StepDeadlineExceeded):
+        strict.run_until_idle()
+
+
+def test_run_until_idle_raises_typed_stuck_error(cfg, params):
+    clock = _StepClock()                   # frozen at 0: arrival never comes
+    eng = _engine(cfg, params, clock=clock)
+    eng.warmup([8])
+    rid = eng.submit(_prompt(cfg), 4, arrival=100.0)
+    with pytest.raises(EngineStuckError) as ei:
+        eng.run_until_idle(max_steps=3)
+    assert ei.value.queued == [rid] and ei.value.running == []
+    assert ei.value.max_steps == 3
+    assert eng.metrics.snapshot()["counters"][
+        "serving_engine_stuck_total"] == 1
+
+
+def test_chaos_harness_smoke(cfg, params):
+    rt = dataclasses.replace(RT, attn_impl="chunked", attn_chunk_q=32)
+    sv = ServingConfig(layout="paged", max_batch=2, page_size=8,
+                       num_pages=32, max_ctx=32, max_queue=4)
+    chaos = ChaosConfig(seed=0, n_requests=6, prompt_lens=(6, 10),
+                        gen_lens=(4, 6), stop_resume_at=(3,))
+    rep = run_chaos(cfg, rt, sv, chaos, params=params)
+    assert rep["survivors_identical"]
+    assert rep["leaked_pages"] == 0
+    assert rep["recompiles_steady_state"] == 0
+    assert sum(rep["outcomes"].values()) == chaos.n_requests
+    assert rep["events"]["stop_resumes"] == 1

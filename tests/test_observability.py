@@ -269,19 +269,23 @@ def test_engine_telemetry_is_token_identity_neutral(reduced_cfg):
     assert names.count("step") == stats["steps"]
     for r in fin:
         assert f"r{r.rid}" in names
-    # registry agrees with the engine's own counts
+    # registry agrees with the engine's own counts; latency histograms
+    # carry the typed outcome label (all four requests finished cleanly)
     hists = stats["metrics"]["histograms"]
-    assert hists["ttft_us"]["count"] == stats["requests_finished"] == 4
+    assert hists['ttft_us{outcome="ok"}']["count"] \
+        == stats["requests_finished"] == 4
     assert hists["step_wall_us"]["count"] == stats["steps"]
     counters = stats["metrics"]["counters"]
     assert counters["decode_tokens_total"] == stats["decode_tokens"]
     assert counters["requests_finished_total"] == 4
+    assert counters['requests_retired_total{outcome="ok"}'] == 4
+    assert stats["outcomes"] == {"ok": 4}
     # warmup compiled every bucket: zero steady-state recompiles (strict
     # mode would have raised) and a non-empty compile ledger
     assert stats["recompiles"]["steady_state"] == 0
     assert stats["recompiles"]["total"] > 0
     # Prometheus exposition renders the same registry
-    assert "ttft_us_count 4" in eng.metrics.render_text()
+    assert 'ttft_us_count{outcome="ok"} 4' in eng.metrics.render_text()
 
 
 def test_engine_stats_with_zero_finished_requests(reduced_cfg):

@@ -18,7 +18,13 @@ from repro.serving.kv_pages import (
     paged_read,
     paged_write,
 )
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import (
+    CANCELLED,
+    Request,
+    Scheduler,
+    ShedError,
+    TIMEOUT,
+)
 
 
 SV = ServingConfig(layout="paged", max_batch=2, page_size=4, num_pages=8,
@@ -179,43 +185,28 @@ def test_poisoned_page0_cannot_leak_through_dead_table_slots():
 
 
 # ------------------------------------------------- allocator property test --
-def _run_sim(trace_spec, num_pages, max_new):
+def _run_sim(trace_spec, num_pages, max_new, events=(), max_queue=0):
     """Drive submit/step/preempt/finish through the real Scheduler+manager
     (model replaced by a deterministic token stream), asserting allocator
-    invariants after every step."""
+    invariants after every event.  `events` injects request-lifecycle
+    hazards — ("cancel", k) aborts the k-th live request, ("expire", k)
+    backdates its deadline so the step-boundary sweep retires it — and
+    `max_queue` bounds admission so oversubscribed traces shed.  Structural
+    invariants come from the shared checkers (`kv.check_invariants` /
+    `sched.check_invariants`, the same ones the chaos harness asserts);
+    the sim adds the write-discipline checks only it can make (it knows
+    which page every token lands in)."""
     sv = ServingConfig(layout="paged", max_batch=2, page_size=4,
-                       num_pages=num_pages, max_ctx=16)
+                       num_pages=num_pages, max_ctx=16, max_queue=max_queue)
     kv = PagedKVCacheManager(sv)
-    sched = Scheduler(kv, max_batch=2)
+    sched = Scheduler(kv, max_batch=2, max_queue=max_queue)
     ps = sv.page_size
     bases = [np.arange(16, dtype=np.int32),
              1000 + np.arange(16, dtype=np.int32)]
 
     def check():
-        # partition: blank / warm / in-use cover the pool exactly once
-        blank, warm = set(kv.blank), set(kv.warm)
-        in_use = set(kv.refcount)
-        assert not (blank & warm) and not (blank & in_use) \
-            and not (warm & in_use)
-        assert blank | warm | in_use == set(range(sv.num_pages))
-        assert all(c >= 1 for c in kv.refcount.values())
-        # free + sum of 1/refcount ownership shares == whole pool
-        shares = sum(1.0 / kv.refcount[p]
-                     for pages in kv.pages.values() for p in pages)
-        assert abs(kv.available + shares - sv.num_pages) < 1e-9
-        # no page owned twice without the refcount knowing
-        owners = {}
-        for rid, pages in kv.pages.items():
-            for p in pages:
-                owners[p] = owners.get(p, 0) + 1
-                assert len(set(pages)) == len(pages)
-        assert owners == kv.refcount
-        # only registered (immutable, full) pages are ever shared
-        for p, c in kv.refcount.items():
-            if c > 1:
-                assert p in kv.page_hash
-        # warm pages are exactly the registered refcount-0 pages
-        assert all(p in kv.page_hash for p in warm)
+        kv.check_invariants()
+        sched.check_invariants()
 
     def write(req, position):
         # COW discipline: the page a position lands in is exclusively ours
@@ -224,15 +215,39 @@ def _run_sim(trace_spec, num_pages, max_new):
         assert kv.refcount[page] == 1, "write into a shared page"
         assert page not in kv.page_hash, "write into a sealed page"
 
-    rid = 0
+    rid, n_shed = 0, 0
     for arrival, base_i, L in trace_spec:
-        sched.submit(_req(rid, bases[base_i][:L], max_new=max_new,
-                          arrival=float(arrival)))
+        try:
+            sched.submit(_req(rid, bases[base_i][:L], max_new=max_new,
+                              arrival=float(arrival)))
+        except ShedError:
+            n_shed += 1
+            assert rid not in kv.pages        # shed before holding anything
         rid += 1
+    if max_queue:
+        assert len(sched.waiting) <= max_queue
+    ev = list(events)
     now, guard = 0.0, 0
     while not sched.idle:
         guard += 1
         assert guard < 500
+        if ev:
+            kind, k = ev.pop(0)
+            live = sorted({r.rid for r in sched.waiting} | set(sched.running))
+            target = live[k % len(live)]
+            if kind == "cancel":
+                retired = sched.cancel(target, now)
+                assert retired is not None and retired.outcome == CANCELLED
+                assert target not in kv.pages, "cancel leaked pages"
+            else:                               # backdate: expires this step
+                req = sched.running.get(target) or next(
+                    r for r in sched.waiting if r.rid == target)
+                req.deadline = now
+            check()
+        for req in sched.expire(now):
+            assert req.outcome == TIMEOUT
+            assert req.rid not in kv.pages, "expiry leaked pages"
+        check()
         for req in sched.admit(now):
             L = len(req.prefix)
             for p in range(req.n_cached, L):         # tail prefill writes
@@ -254,6 +269,7 @@ def _run_sim(trace_spec, num_pages, max_new):
                 sched.finish(req, now)
                 check()
         now += 1.0
+    assert kv.in_use == 0, "drained scheduler left pages held"
 
 
 @given(st.lists(
@@ -265,6 +281,24 @@ def _run_sim(trace_spec, num_pages, max_new):
 @settings(max_examples=25, deadline=None)
 def test_allocator_invariants_under_random_traces(spec, num_pages):
     _run_sim(spec, num_pages, max_new=4)
+
+
+@given(st.lists(
+    st.sampled_from([(a, b, L)
+                     for a in (0, 1, 2) for b in (0, 1)
+                     for L in (3, 5, 8, 10)]),
+    min_size=2, max_size=8),
+    st.sampled_from([4, 6, 8]),
+    st.lists(st.tuples(st.sampled_from(["cancel", "expire"]),
+                       st.integers(0, 7)), max_size=6),
+    st.sampled_from([0, 2, 3]))
+@settings(max_examples=25, deadline=None)
+def test_allocator_invariants_under_lifecycle_events(spec, num_pages,
+                                                     events, max_queue):
+    """Hardening: cancels, deadline expiries, and bounded-queue shedding
+    interleaved with admission/preemption/finish must preserve every
+    allocator invariant and leak no pages."""
+    _run_sim(spec, num_pages, max_new=4, events=events, max_queue=max_queue)
 
 
 # ------------------------------------------------------------- engine e2e --
