@@ -1,0 +1,114 @@
+"""Contract-aware static analysis for the serving stack.
+
+``python -m repro.analysis [paths] [--baseline analysis_baseline.json]``
+
+The repo's core guarantees were, until this package, prose: docstrings
+promised zero steady-state recompiles, comments explained which buffers are
+donated, CHANGES.md recorded which XLA twins are bit-identical, and the
+only machine check was the *runtime* recompile sentinel
+(``observability/jit_watch.py``) — which needs a serving run to fire.  The
+paper's LUT multiplier wins precisely because a 4-bit lookup table can be
+verified against all 256 input pairs; this package is the software
+analogue for the serving stack's invariants: every contract below is
+enforced at lint time, on the AST, with no JAX import and no device.
+
+Enforced contracts (one rule each — ``--list-rules`` for the live list):
+
+``recompile-hazard``
+    Step jits compile once per signature, then replay forever.  Python
+    scalars / shape-derived values passed non-static into a jit'd step
+    (weak-type and trace re-specialization), ``jax.jit`` built inside a
+    loop, or ``jax.jit(f)(x)`` compile-and-invoke are all flagged.  This
+    is the static twin of the jit_watch steady-state sentinel: the
+    sentinel makes a recompile loud at runtime, the rule stops it from
+    being written.
+
+``donation-use-after-transfer``
+    The serving steps donate the KV cache pool (``donate_argnums=(2,)`` in
+    ``launch/steps.py``); a donated buffer is dead the moment the call
+    dispatches.  Reading it afterwards in the same scope — without
+    rebinding it from the call result — is flagged.  Donation info comes
+    from local ``jax.jit(..., donate_argnums=...)`` assignments plus the
+    declared engine step attributes (``rules_jit.STEP_JIT_ATTRS``).
+
+``host-sync-in-hot-path``
+    A steady-state engine step budgets exactly ONE device->host transfer:
+    the int32-per-row token readback.  ``np.asarray`` / ``.item()`` /
+    ``float()`` on device values anywhere else inside the per-step
+    functions (``_step_*``, ``_ragged_exec``, ``_decode_batch``,
+    ``_prefill_request``) is flagged; the sanctioned readbacks carry
+    inline suppressions so the budget is visible in the diff.
+
+``pallas-kernel-hygiene``
+    Kernel bodies must not branch in Python on traced values (ref loads,
+    ``pl.program_id``) — use ``pl.when`` / ``jnp.where``.  Wrappers that
+    launch ``pl.pallas_call`` must assert their grid/block divisibility
+    contracts (``x % block == 0``).  Backend dispatch (``interpret=``,
+    ``jax.default_backend()``) belongs to ``kernels.ops`` /
+    ``kernels.dispatch`` only.
+
+``tolerance-claim-mismatch``
+    A test whose name/docstring claims bit-identity / exact round-trips
+    must assert ``np.testing.assert_array_equal``, not ``assert_allclose``
+    — the twin contract is exact, so the test must be too.
+
+``metrics-label-hygiene``
+    ``MetricsRegistry`` label values must come from closed enums/literals;
+    call-time-formatted values (f-strings, ``str(x)``) mint unbounded time
+    series.  Literal ``outcome=`` labels must be in the typed
+    ``ok|cancelled|timeout|shed|error`` taxonomy.
+
+Suppressing a finding
+---------------------
+Append ``# repro: ignore[rule-name]  -- why this line is sanctioned`` to
+the flagged line (or put it on a comment-only line directly above, for
+lines with no column budget).  ``# repro: ignore`` with no bracket
+suppresses every rule on that line.  Suppressions are for *sanctioned*
+violations — the one token readback per step, a profiling probe whose
+recompiles are absorbed — and should always carry the justification after
+the marker.
+
+Baseline workflow
+-----------------
+``analysis_baseline.json`` (repo root) holds accepted pre-existing
+findings keyed by a fingerprint of (rule, path, source line), so line
+drift does not invalidate it but editing a flagged line does.  CI runs::
+
+    python -m repro.analysis --baseline analysis_baseline.json --format json
+
+and fails only on findings NOT in the baseline.  After fixing a baselined
+violation (or accepting a new one — rare, justify it), re-baseline with::
+
+    python -m repro.analysis --baseline analysis_baseline.json --write-baseline
+
+which prunes stale entries, keeps existing justifications, and stamps new
+entries with a TODO justification a reviewer is expected to replace.
+"""
+
+from repro.analysis.core import (
+    Finding,
+    Rule,
+    SourceFile,
+    all_rules,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+    gate,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.cli import main
+
+__all__ = [
+    "Finding",
+    "Rule",
+    "SourceFile",
+    "all_rules",
+    "analyze_file",
+    "analyze_paths",
+    "analyze_source",
+    "gate",
+    "load_baseline",
+    "main",
+    "write_baseline",
+]

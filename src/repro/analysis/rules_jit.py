@@ -1,0 +1,268 @@
+"""Rules for the jit contracts: recompile hazards and donation discipline.
+
+Both rules lean on the same local knowledge:
+
+  * ``f = jax.jit(g, donate_argnums=..., static_argnums=...)`` assignments
+    in the analyzed module give the analyzer per-name donation/static info.
+  * The serving engine's step jits are built in ``launch/steps.py`` and
+    stored on attributes — a cross-module fact the AST cannot see — so the
+    engine contract is declared here: ``STEP_JIT_ATTRS`` names the
+    attributes that hold donated single-signature step jits (all donate the
+    cache argument at position 2, per ``make_serving_steps`` /
+    ``make_ragged_step``).
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import (
+    Finding,
+    SourceFile,
+    assigned_names,
+    dotted_name,
+    expr_key,
+    int_constants,
+    rule,
+    stmt_scan_roots,
+    str_constants,
+    walk_statements,
+)
+
+#: engine attributes that hold jits built by launch/steps.py — every one is
+#: a single-signature step function with the KV cache donated at position 2
+STEP_JIT_ATTRS: Dict[str, Tuple[int, ...]] = {
+    "_prefill": (2,),
+    "_prefill_tail": (2,),
+    "_decode": (2,),
+    "_ragged": (2,),
+}
+
+_JIT_NAMES = ("jax.jit", "jit")
+
+
+@dataclass
+class JitInfo:
+    donate: Tuple[int, ...] = ()
+    static_nums: Tuple[int, ...] = ()
+    static_names: Tuple[str, ...] = ()
+
+
+def _jit_call_info(call: ast.Call) -> Optional[JitInfo]:
+    if dotted_name(call.func) not in _JIT_NAMES:
+        return None
+    info = JitInfo()
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            info.donate = int_constants(kw.value)
+        elif kw.arg == "static_argnums":
+            info.static_nums = int_constants(kw.value)
+        elif kw.arg == "static_argnames":
+            info.static_names = str_constants(kw.value)
+    return info
+
+
+def _collect_local_jits(tree: ast.AST) -> Dict[str, JitInfo]:
+    """Names assigned from a ``jax.jit(...)`` call anywhere in the module
+    (module level, function bodies, tuple unpacking of parallel jits)."""
+    jits: Dict[str, JitInfo] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        values: List[ast.AST]
+        targets: List[ast.AST]
+        if (isinstance(node.value, ast.Tuple)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Tuple)
+                and len(node.targets[0].elts) == len(node.value.elts)):
+            targets = list(node.targets[0].elts)
+            values = list(node.value.elts)
+        else:
+            targets = list(node.targets)
+            values = [node.value] * len(node.targets)
+        for tgt, val in zip(targets, values):
+            if not isinstance(val, ast.Call):
+                continue
+            info = _jit_call_info(val)
+            if info is None:
+                continue
+            key = expr_key(tgt)
+            if key:
+                jits[key] = info
+    return jits
+
+
+def _callee_info(call: ast.Call,
+                 local_jits: Dict[str, JitInfo]) -> Optional[JitInfo]:
+    """JitInfo for a call to a known jit'd step: a locally assigned jit
+    name, or one of the engine's step-jit attributes."""
+    key = expr_key(call.func)
+    if key and key in local_jits:
+        return local_jits[key]
+    if isinstance(call.func, ast.Attribute) \
+            and call.func.attr in STEP_JIT_ATTRS:
+        return JitInfo(donate=STEP_JIT_ATTRS[call.func.attr])
+    return None
+
+
+# ------------------------------------------------------ recompile-hazard ----
+_SCALAR_BUILTINS = {"len", "int", "float", "bool", "round", "min", "max",
+                    "sum"}
+
+
+def _is_host_scalar_expr(node: ast.AST) -> bool:
+    """Python scalars and shape-derived host values: the argument classes
+    that flip weak types or re-specialize a traced signature per call."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, (int, float, bool)) \
+            and not isinstance(node.value, complex)
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func) in _SCALAR_BUILTINS
+    if isinstance(node, ast.Attribute) and node.attr in ("shape", "ndim",
+                                                         "size"):
+        return True
+    if isinstance(node, ast.Subscript):
+        return _is_host_scalar_expr(node.value)
+    if isinstance(node, ast.BinOp):
+        return _is_host_scalar_expr(node.left) \
+            or _is_host_scalar_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_host_scalar_expr(node.operand)
+    return False
+
+
+@rule("recompile-hazard",
+      "Python scalars / shape-derived values passed non-static into a "
+      "jit'd step, or jits created per iteration — the static twin of the "
+      "jit_watch steady-state sentinel")
+def check_recompile_hazard(sf: SourceFile) -> Iterable[Finding]:
+    tree = sf.tree
+    assert tree is not None
+    local_jits = _collect_local_jits(tree)
+
+    # jax.jit(...) nodes that sit inside a loop body
+    loop_jits: Set[ast.Call] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) \
+                        and _jit_call_info(sub) is not None:
+                    loop_jits.add(sub)
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        # jax.jit(f)(x): a fresh executable compiled on every execution of
+        # this line — in anything called repeatedly, that is a recompile
+        # per call
+        if isinstance(node.func, ast.Call) \
+                and _jit_call_info(node.func) is not None:
+            yield Finding(
+                rule="recompile-hazard", path=sf.rel,
+                line=node.lineno, col=node.col_offset,
+                message="jax.jit(...) compiled and invoked in one "
+                        "expression: every execution pays a fresh trace + "
+                        "compile; hoist the jit to module/init scope")
+        if node in loop_jits and _jit_call_info(node) is not None:
+            yield Finding(
+                rule="recompile-hazard", path=sf.rel,
+                line=node.lineno, col=node.col_offset,
+                message="jax.jit(...) created inside a loop: each "
+                        "iteration gets a fresh compile cache; hoist the "
+                        "jit out of the loop")
+        info = _callee_info(node, local_jits)
+        if info is None:
+            continue
+        for i, arg in enumerate(node.args):
+            if i in info.static_nums or i in info.donate:
+                continue
+            if _is_host_scalar_expr(arg):
+                yield Finding(
+                    rule="recompile-hazard", path=sf.rel,
+                    line=arg.lineno, col=arg.col_offset,
+                    message=f"Python scalar/shape-derived value passed "
+                            f"non-static into jit'd step "
+                            f"'{dotted_name(node.func)}' (arg {i}): "
+                            f"weak-type/shape drift re-specializes the "
+                            f"trace per call — pass a device array or "
+                            f"declare the arg static")
+        for kw in node.keywords:
+            if kw.arg is None or kw.arg in info.static_names:
+                continue
+            if _is_host_scalar_expr(kw.value):
+                yield Finding(
+                    rule="recompile-hazard", path=sf.rel,
+                    line=kw.value.lineno, col=kw.value.col_offset,
+                    message=f"Python scalar/shape-derived value passed "
+                            f"non-static into jit'd step "
+                            f"'{dotted_name(node.func)}' (kwarg "
+                            f"'{kw.arg}'): declare it in static_argnames "
+                            f"or pass a device array")
+
+
+# ------------------------------------- donation-use-after-transfer ----------
+@rule("donation-use-after-transfer",
+      "a buffer passed through a donated argnum and read again in the same "
+      "scope — donated buffers are dead the moment the call dispatches")
+def check_donation_use_after_transfer(sf: SourceFile) -> Iterable[Finding]:
+    tree = sf.tree
+    assert tree is not None
+    local_jits = _collect_local_jits(tree)
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield from _check_function(sf, fn, local_jits)
+
+
+def _donating_calls(roots: List[ast.AST], local_jits: Dict[str, JitInfo]
+                    ) -> List[Tuple[ast.Call, List[str]]]:
+    out = []
+    for root in roots:
+        for node in ast.walk(root):
+            if not isinstance(node, ast.Call):
+                continue
+            info = _callee_info(node, local_jits)
+            if info is None or not info.donate:
+                continue
+            donated = [key for i in info.donate if i < len(node.args)
+                       for key in (expr_key(node.args[i]),) if key]
+            if donated:
+                out.append((node, donated))
+    return out
+
+
+def _check_function(sf: SourceFile, fn: ast.AST,
+                    local_jits: Dict[str, JitInfo]) -> Iterable[Finding]:
+    #: donated-expr key -> line where it was donated
+    dead: Dict[str, int] = {}
+    body = getattr(fn, "body", [])
+    for stmt in walk_statements(body):
+        roots = stmt_scan_roots(stmt)
+        # 1) loads of currently-dead buffers in this statement's own exprs
+        if dead:
+            for root in roots:
+                for node in ast.walk(root):
+                    if not isinstance(node, (ast.Name, ast.Attribute)):
+                        continue
+                    if not isinstance(getattr(node, "ctx", None), ast.Load):
+                        continue
+                    key = expr_key(node)
+                    if key in dead:
+                        yield Finding(
+                            rule="donation-use-after-transfer", path=sf.rel,
+                            line=node.lineno, col=node.col_offset,
+                            message=f"'{key}' was donated to a jit at line "
+                                    f"{dead[key]} and read again here: the "
+                                    f"buffer is dead after transfer — "
+                                    f"rebind it from the call's result")
+                        del dead[key]      # one finding per donation site
+        # 2) donations dispatched by this statement kill their buffers
+        for call, donated in _donating_calls(roots, local_jits):
+            for key in donated:
+                dead[key] = call.lineno
+        # 3) stores (including rebinding from the call result) revive
+        for key in assigned_names(stmt):
+            dead.pop(key, None)

@@ -1,0 +1,160 @@
+"""Rules for test-claim honesty and metrics-label cardinality.
+
+``tolerance-claim-mismatch``: the repo's twin contract is *bit-identity* —
+every Pallas kernel has an XLA twin documented (EXPERIMENTS.md, CHANGES.md)
+as bit-identical, checkpoint restores round-trip exactly, and the serving
+compare modes assert token identity.  A test whose name/docstring claims
+exactness but asserts ``np.testing.assert_allclose`` is quietly weaker than
+the contract it documents: a twin that drifts by 1 ulp would still pass.
+Such tests must use ``np.testing.assert_array_equal`` (or justify the
+tolerance inline).
+
+``metrics-label-hygiene``: every label on the ``MetricsRegistry`` keys a
+new time series.  The outcome taxonomy (``ok|cancelled|timeout|shed|
+error``) and the dispatch labels stay useful only while their cardinality
+is closed — a label value built from an f-string or ``str(x)`` can mint
+unbounded series (one per rid, one per shape...) and silently blow up the
+registry and every dashboard on it.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional
+
+from repro.analysis.core import Finding, SourceFile, dotted_name, rule
+
+# --------------------------------------------- tolerance-claim-mismatch ----
+#: exactness language in a test's name/docstring that makes assert_allclose
+#: a contract violation
+EXACT_CLAIM_RE = re.compile(
+    r"bit[\s_-]?ident|bit[\s_-]?exact|bitwise|bit[\s_-]?for[\s_-]?bit"
+    r"|identical|round[\s_-]?trip|restore",
+    re.IGNORECASE)
+
+
+def _is_test_file(sf: SourceFile) -> bool:
+    parts = sf.rel.split("/")
+    return "tests" in parts[:-1] or parts[-1].startswith("test_")
+
+
+@rule("tolerance-claim-mismatch",
+      "assert_allclose in a test whose name/docstring claims bit-identity "
+      "/ exact round-trips — the twin contract is exact, assert it exactly")
+def check_tolerance_claims(sf: SourceFile) -> Iterable[Finding]:
+    if not _is_test_file(sf):
+        return
+    tree = sf.tree
+    assert tree is not None
+    yield from _visit_scope(sf, tree, context="")
+
+
+def _visit_scope(sf: SourceFile, scope: ast.AST,
+                 context: str) -> Iterable[Finding]:
+    for node in getattr(scope, "body", []):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            ctx = f"{node.name} {ast.get_docstring(node) or ''}"
+            yield from _visit_scope(sf, node, ctx)
+        else:
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                name = dotted_name(call.func)
+                if not name.endswith("assert_allclose"):
+                    continue
+                if EXACT_CLAIM_RE.search(context):
+                    yield Finding(
+                        rule="tolerance-claim-mismatch", path=sf.rel,
+                        line=call.lineno, col=call.col_offset,
+                        message="test claims exactness (name/docstring "
+                                "says bit-identical/round-trip/restore) "
+                                "but asserts allclose: use np.testing."
+                                "assert_array_equal, or justify the "
+                                "tolerance with an inline suppression")
+
+
+# ------------------------------------------------- metrics-label-hygiene ----
+_REGISTRY_METHODS = {"counter", "gauge", "histogram"}
+#: kwargs of the registry methods that are not labels
+_NON_LABEL_KWARGS = {"buckets"}
+#: the typed request-outcome taxonomy (serving/scheduler.py); 'preempted'
+#: is a trace-span outcome, not a metrics label
+OUTCOME_VALUES = {"ok", "cancelled", "timeout", "shed", "error"}
+
+
+def _closed_value(node: ast.AST) -> bool:
+    """Literal, named constant, or attribute chain (enum member / field
+    constrained elsewhere): closed cardinality.  Anything constructed at
+    call time (f-string, concat, str(), %-format, subscript) is open."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return True
+    if isinstance(node, ast.IfExp):
+        return _closed_value(node.body) and _closed_value(node.orelse)
+    return False
+
+
+@rule("metrics-label-hygiene",
+      "MetricsRegistry label values must come from closed enums — "
+      "dynamically formatted labels mint unbounded time series")
+def check_metric_labels(sf: SourceFile) -> Iterable[Finding]:
+    tree = sf.tree
+    assert tree is not None
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not isinstance(node.func, ast.Attribute) \
+                or node.func.attr not in _REGISTRY_METHODS:
+            continue
+        # shape filter: registry methods take (name, help, **labels) with a
+        # literal metric name — a non-registry .counter() (e.g. a dict of
+        # collections.Counter) won't match the two-leading-string shape
+        if len(node.args) < 2:
+            continue
+        if not all(isinstance(a, ast.Constant) and isinstance(a.value, str)
+                   for a in node.args[:2]):
+            # computed name + literal help string: still clearly the
+            # registry shape, so the computed name itself is the bug.
+            # Anything else (e.g. collections.Counter-ish .counter(key, 5))
+            # is not a registry call — out of scope.
+            if not isinstance(node.args[0], ast.Constant) \
+                    and isinstance(node.args[1], ast.Constant) \
+                    and isinstance(node.args[1].value, str):
+                yield Finding(
+                    rule="metrics-label-hygiene", path=sf.rel,
+                    line=node.args[0].lineno, col=node.args[0].col_offset,
+                    message="metric name must be a string literal: a "
+                            "computed name is an unbounded metric "
+                            "namespace")
+            continue
+        for kw in node.keywords:
+            if kw.arg is None:
+                yield Finding(
+                    rule="metrics-label-hygiene", path=sf.rel,
+                    line=node.lineno, col=node.col_offset,
+                    message="**splat labels on a registry metric cannot "
+                            "be cardinality-checked — pass labels "
+                            "explicitly from closed enums")
+                continue
+            if kw.arg in _NON_LABEL_KWARGS:
+                continue
+            if not _closed_value(kw.value):
+                yield Finding(
+                    rule="metrics-label-hygiene", path=sf.rel,
+                    line=kw.value.lineno, col=kw.value.col_offset,
+                    message=f"label '{kw.arg}' is built at call time "
+                            f"(f-string/format/str()): label values must "
+                            f"come from closed enums or literals — every "
+                            f"distinct value is a new time series")
+            elif kw.arg == "outcome" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value not in OUTCOME_VALUES:
+                yield Finding(
+                    rule="metrics-label-hygiene", path=sf.rel,
+                    line=kw.value.lineno, col=kw.value.col_offset,
+                    message=f"outcome label {kw.value.value!r} is not in "
+                            f"the typed taxonomy "
+                            f"{sorted(OUTCOME_VALUES)} — extend the "
+                            f"taxonomy deliberately or fix the typo")

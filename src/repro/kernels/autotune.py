@@ -28,8 +28,18 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.observability.metrics import global_registry
+
 ENV_CACHE_PATH = "REPRO_AUTOTUNE_CACHE"
 ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+
+# What a rejected candidate tile may legitimately raise: bad block/grid
+# shapes (ValueError, or AssertionError from the wrappers' divisibility
+# contracts), a kernel with no lowering on this backend
+# (NotImplementedError), or an XLA compile/runtime failure.  The tuner
+# skips these; real programming errors propagate.
+_TILE_REJECT_ERRORS = (ValueError, AssertionError, NotImplementedError,
+                       jax.errors.JaxRuntimeError)
 
 # in-memory mirror of the on-disk cache: key -> {"bm","bn","bk","us"}
 _CACHE: Dict[str, Dict] = {}
@@ -287,7 +297,16 @@ def tune(op: str, make_call: Callable[[Dict[str, int]], Callable[[], object]],
     for blocks in cands:
         try:
             us = timer(make_call(blocks))
-        except Exception:                  # unsupported tile on this backend
+        except _TILE_REJECT_ERRORS:
+            # unsupported tile on this backend: bad block/grid shape
+            # (ValueError / AssertionError from the wrapper contracts),
+            # no Mosaic lowering (NotImplementedError), or a compile/run
+            # failure (XlaRuntimeError).  Anything else — TypeError,
+            # KeyboardInterrupt, a typo in make_call — propagates.
+            global_registry().counter(
+                "autotune_tiles_rejected_total",
+                "autotune candidates skipped on lowering/compile failure",
+                op=op).inc()
             continue
         if us < best_us:
             best, best_us = blocks, us

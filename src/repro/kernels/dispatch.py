@@ -1,0 +1,44 @@
+"""One home for the backend-dispatch decision the kernel modules share.
+
+Every Pallas wrapper takes ``interpret: Optional[bool]`` and needs the same
+default when called directly (tests, benchmarks) rather than through
+``kernels.ops``: compile via Mosaic on TPU, interpret elsewhere, with the
+``REPRO_PALLAS_INTERPRET`` env override tests use.  Before this module each
+kernel file re-derived that inline from ``jax.default_backend()`` — six
+copies of one policy, invisible to review when one drifted.  The
+``pallas-kernel-hygiene`` analysis rule now pins backend decisions to this
+module and ``ops.py``; everything else must route through here.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+ENV_INTERPRET = "REPRO_PALLAS_INTERPRET"
+
+
+def env_interpret() -> Optional[bool]:
+    """The test/debug override: unset -> None, '0'/'false' -> compile,
+    anything else -> interpret."""
+    env = os.environ.get(ENV_INTERPRET)
+    if env is None:
+        return None
+    return env not in ("0", "false", "False")
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a wrapper's ``interpret=None`` default: explicit argument
+    wins, then the env override, then Mosaic-on-TPU / interpret-elsewhere.
+
+    ``ops.py`` never passes None here — its three-way Mosaic/interpret/
+    XLA-twin dispatch already decided — so this only governs direct kernel
+    calls."""
+    if interpret is not None:
+        return interpret
+    env = env_interpret()
+    if env is not None:
+        return env
+    return jax.default_backend() != "tpu"

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import default_interpret
 from .packing import pad_to, unpack_nibbles
 
 INT4_QMAX = 7.0
@@ -113,8 +114,7 @@ def _call(a, a_scale, w_kmajor, w_scale, *, bm, bn, bk, interpret, fused):
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        interpret=(jax.default_backend() != "tpu"
-                   if interpret is None else interpret),
+        interpret=default_interpret(interpret),
     )(a_lo, a_hi, w_kmajor, a_scale, w_scale)
     return out[:M, :N]
 

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import default_interpret
 from .packing import lut4_tables, pad_to, table_take
 
 
@@ -126,7 +127,6 @@ def lut4_matmul(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        interpret=(jax.default_backend() != "tpu"
-                   if interpret is None else interpret),
+        interpret=default_interpret(interpret),
     )(a_lo, a_hi, w_kmajor, t_lo, t_hi, a_scale, w_scale)
     return out[:M, :N]

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import default_interpret
 from .packing import flatten_to_tiles, table_take
 from .ref import make_product_lut
 
@@ -76,8 +77,7 @@ def lut_mul4(
     (CPU/GPU have no Mosaic lowering for this kernel); pass an explicit
     bool to override either way.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = default_interpret(interpret)
     assert a_q.shape == b_q.shape
     shape = a_q.shape
     bm, cols = block
@@ -85,6 +85,7 @@ def lut_mul4(
     a2, n = flatten_to_tiles(a_q, bm, cols)
     b2, _ = flatten_to_tiles(b_q, bm, cols)
     rows_padded = a2.shape[0]
+    assert rows_padded % bm == 0 and a2.shape[1] == cols, (a2.shape, block)
     lut = jnp.asarray(make_product_lut())
 
     kernel = _kernel_onehot if strategy == "onehot" else _kernel_take

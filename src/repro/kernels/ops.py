@@ -23,7 +23,6 @@ explicitly overridden (bm=/bn=/bk= kwargs).
 
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
@@ -32,6 +31,7 @@ import jax.numpy as jnp
 from repro.observability.metrics import global_registry
 
 from . import autotune, packing, paged_attention, ragged_attention, ref
+from .dispatch import env_interpret
 from .int4_matmul import int4_matmul as _int4_matmul
 from .int4_matmul import int4_matmul_fused as _int4_matmul_fused
 from .lut4_matmul import lut4_matmul as _lut4_matmul
@@ -46,9 +46,9 @@ def _mode(interpret: Optional[bool]) -> str:
         return _INTERPRET
     if interpret is False:
         return _PALLAS
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    env = env_interpret()
     if env is not None:
-        return _PALLAS if env in ("0", "false", "False") else _INTERPRET
+        return _INTERPRET if env else _PALLAS
     return _PALLAS if jax.default_backend() == "tpu" else _XLA
 
 

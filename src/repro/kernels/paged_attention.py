@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .dispatch import default_interpret
 from .packing import unpack_nibbles
 
 NEG_INF = -1e30
@@ -169,15 +170,16 @@ def paged_decode_attention(
     B, H, hd = q.shape
     P, ps, KV = k_pool.shape[:3]
     pps = tbl.shape[1]
+    assert H % KV == 0, (H, KV)           # query heads tile evenly over KV heads
     G = H // KV
     quant = k_scale is not None
 
     bkv = _largest_divisor(KV, bkv if bkv > 0 else KV)
+    assert KV % bkv == 0, (KV, bkv)       # _largest_divisor contract
     pp = max(1, min(pp, pps))
     nj = -(-pps // pp)
     nh = KV // bkv
-    interpret = (jax.default_backend() != "tpu"
-                 if interpret is None else interpret)
+    interpret = default_interpret(interpret)
 
     tbl = tbl.astype(jnp.int32)
     last_pos = last_pos.astype(jnp.int32)
@@ -393,12 +395,13 @@ def flash_prefill(
 ) -> jnp.ndarray:
     B, Sq, H, hd = q.shape
     KV = k.shape[2]
+    assert H % KV == 0, (H, KV)           # query heads tile evenly over KV heads
     G = H // KV
     bq = min(bq, max(8, Sq))
     bk = min(bk, max(8, k.shape[1]))
     bkv = _largest_divisor(KV, bkv if bkv > 0 else KV)
-    interpret = (jax.default_backend() != "tpu"
-                 if interpret is None else interpret)
+    assert KV % bkv == 0, (KV, bkv)       # _largest_divisor contract
+    interpret = default_interpret(interpret)
 
     def padq(x, value=0):
         pad = (-x.shape[1]) % bq

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .dispatch import default_interpret
 from .paged_attention import (
     NEG_INF,
     _dequant_slab,
@@ -146,15 +147,16 @@ def ragged_decode_attention(
     T, H, hd = q.shape
     P, ps, KV = k_pool.shape[:3]
     maxB, pps = tbl.shape
+    assert H % KV == 0, (H, KV)           # query heads tile evenly over KV heads
     G = H // KV
     quant = k_scale is not None
 
     bkv = _largest_divisor(KV, bkv if bkv > 0 else KV)
+    assert KV % bkv == 0, (KV, bkv)       # _largest_divisor contract
     pp = max(1, min(pp, pps))
     nj = -(-pps // pp)
     nh = KV // bkv
-    interpret = (jax.default_backend() != "tpu"
-                 if interpret is None else interpret)
+    interpret = default_interpret(interpret)
 
     tbl = tbl.astype(jnp.int32)
     token_slot = token_slot.astype(jnp.int32)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .dispatch import default_interpret
 from .packing import pad_to, unpack_nibbles
 
 
@@ -124,8 +125,7 @@ def w4a16_matmul(
     Mp = x_lo.shape[0]
     Np = w_kmajor.shape[1]
     nk = x_lo.shape[1] // bkh
-    interpret = (jax.default_backend() != "tpu"
-                 if interpret is None else interpret)
+    interpret = default_interpret(interpret)
     x_specs = [
         pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),
         pl.BlockSpec((bm, bkh), lambda i, j, k: (i, k)),

@@ -512,7 +512,8 @@ class InferenceEngine:
             jnp.asarray(emit_rows))
         self._strip_tables()
         self._poll_jit("ragged", (1, T))
-        nxt = np.asarray(nxt)
+        # the step's ONE sanctioned device->host sync: token readback
+        nxt = np.asarray(nxt)  # repro: ignore[host-sync-in-hot-path]
         ps = self.sv.page_size
         for req, start, n in plan:
             end = start + n
@@ -826,7 +827,8 @@ class InferenceEngine:
         self._observe_packing(n, nb)
         self.metrics.counter("decode_tokens_total",
                              "tokens emitted by decode steps").inc(n)
-        nxt = np.asarray(nxt)
+        # the step's ONE sanctioned device->host sync: token readback
+        nxt = np.asarray(nxt)  # repro: ignore[host-sync-in-hot-path]
         ps = self.sv.page_size
         for i, req in enumerate(batch):
             req.n_cached += 1

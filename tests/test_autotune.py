@@ -109,12 +109,15 @@ def test_load_skips_malformed_entries(isolated_cache):
 
 
 def test_tune_skips_failing_candidates(isolated_cache):
+    # a rejected tile raises one of the lowering/compile classes the tuner
+    # catches (here: no Mosaic lowering); each skip bumps the rejection
+    # counter
     boom = {"bm": 32, "bn": 128, "bk": 128}
 
     def make_call(blocks):
         def run():
             if blocks == boom:
-                raise RuntimeError("unsupported tile")
+                raise NotImplementedError("unsupported tile")
             return blocks
         return run
 
@@ -122,10 +125,32 @@ def test_tune_skips_failing_candidates(isolated_cache):
         fn()
         return 10.0
 
+    from repro.observability.metrics import global_registry
+    rejected = global_registry().counter(
+        "autotune_tiles_rejected_total",
+        "autotune candidates skipped on lowering/compile failure",
+        op="int4_matmul")
+    before = rejected.value
     best, _ = autotune.tune("int4_matmul", make_call, 64, 512, 256, "int8",
                             candidates=[boom, {"bm": 64, "bn": 128, "bk": 256}],
                             timer=fake_timer)
     assert best == {"bm": 64, "bn": 128, "bk": 256}
+    assert rejected.value == before + 1
+
+
+def test_tune_propagates_programming_errors(isolated_cache):
+    # a TypeError is a bug in make_call, not a rejected tile: the narrowed
+    # except must let it escape instead of silently discarding the
+    # candidate
+    def make_call(blocks):
+        def run():
+            raise TypeError("bug, not a bad tile")
+        return run
+
+    with pytest.raises(TypeError):
+        autotune.tune("int4_matmul", make_call, 64, 512, 256, "int8",
+                      candidates=[{"bm": 64, "bn": 128, "bk": 256}],
+                      timer=lambda fn: (fn(), 10.0)[1])
 
 
 def test_tune_key_matches_ops_lookup_key(isolated_cache):

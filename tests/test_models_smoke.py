@@ -71,7 +71,8 @@ def test_prefill_decode_matches_forward(arch):
 
 
 def test_scan_matches_unrolled():
-    """scan-over-layers and the unrolled cost-probe build identical math."""
+    """scan-over-layers and the unrolled cost-probe agree to float32
+    tolerance (same math, but XLA may fuse/reassociate differently)."""
     cfg = get_config("qwen3-4b").reduced(n_layers=3)
     params = init_model(jax.random.PRNGKey(0), cfg)
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)

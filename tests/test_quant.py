@@ -88,7 +88,7 @@ def test_qdense_netlist_oracle_matches_int_sim():
     x = jnp.asarray(rng.standard_normal((3, 16), dtype=np.float32))
     y_net = qdense(w, x, QuantConfig(backend="netlist"))
     y_sim = qdense(w, x, QuantConfig(backend="int_sim"))
-    np.testing.assert_allclose(np.asarray(y_net), np.asarray(y_sim), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(y_net), np.asarray(y_sim))
 
 
 def test_qdense_quant_error_small_vs_float():

@@ -97,8 +97,8 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
     assert mgr.latest() == 3
     restored, step = mgr.restore(tree)
     assert step == 3
-    np.testing.assert_allclose(np.asarray(restored["a"]),
-                               np.arange(6).reshape(2, 3) * 3)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(6).reshape(2, 3) * 3)
     assert restored["nested"]["b"].dtype == jnp.bfloat16
     # keep=2 -> step 1 garbage-collected
     assert not os.path.exists(os.path.join(d, "step_00000001"))
@@ -124,7 +124,7 @@ def test_checkpoint_elastic_restore_new_sharding(tmp_path):
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
     shardings = {"w": NamedSharding(mesh, P(None))}
     restored, _ = CheckpointManager(d).restore(tree, shardings=shardings)
-    np.testing.assert_allclose(np.asarray(restored["w"]), np.arange(8))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8))
     assert restored["w"].sharding == shardings["w"]
 
 

@@ -1,0 +1,105 @@
+"""Pyright error-count gate for the typed modules.
+
+Runs ``pyright --outputjson`` over the scope in ``pyrightconfig.json``
+(``src/repro/core`` + ``src/repro/analysis``, basic mode) and compares
+per-file *error* counts against the committed ``pyright_baseline.json``.
+The gate is a ratchet:
+
+  * a file exceeding its baselined count fails CI (new type errors);
+  * a file under its baselined count prints a nudge to re-baseline
+    (``--write``), so the budget only ever shrinks;
+  * warnings are reported but never gate (jax has no complete stubs).
+
+Run locally (needs the pyright CLI on PATH — ``npm i -g pyright``)::
+
+    python tools/pyright_gate.py            # gate
+    python tools/pyright_gate.py --write    # accept current counts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+from typing import Dict
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(ROOT, "pyright_baseline.json")
+
+
+def run_pyright() -> dict:
+    exe = shutil.which("pyright")
+    if exe is None:
+        print("pyright not on PATH (npm i -g pyright)", file=sys.stderr)
+        raise SystemExit(2)
+    proc = subprocess.run(
+        [exe, "--outputjson", "--project",
+         os.path.join(ROOT, "pyrightconfig.json")],
+        capture_output=True, text=True, cwd=ROOT)
+    try:
+        return json.loads(proc.stdout)
+    except ValueError:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise SystemExit(2)
+
+
+def error_counts(report: dict) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for diag in report.get("generalDiagnostics", []):
+        if diag.get("severity") != "error":
+            continue
+        rel = os.path.relpath(diag.get("file", "?"), ROOT).replace(
+            os.sep, "/")
+        counts[rel] = counts.get(rel, 0) + 1
+    return counts
+
+
+def load_baseline() -> Dict[str, int]:
+    try:
+        with open(BASELINE, encoding="utf-8") as f:
+            return dict(json.load(f).get("files", {}))
+    except (OSError, ValueError):
+        return {}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--write", action="store_true",
+                    help="accept current per-file error counts as baseline")
+    args = ap.parse_args(argv)
+
+    report = run_pyright()
+    counts = error_counts(report)
+    summary = report.get("summary", {})
+
+    if args.write:
+        payload = {"files": {k: counts[k] for k in sorted(counts)}}
+        with open(BASELINE, "w", encoding="utf-8") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {BASELINE}: {sum(counts.values())} error(s) in "
+              f"{len(counts)} file(s)")
+        return 0
+
+    baseline = load_baseline()
+    failed = False
+    for path in sorted(set(counts) | set(baseline)):
+        have, allowed = counts.get(path, 0), baseline.get(path, 0)
+        if have > allowed:
+            print(f"FAIL {path}: {have} error(s), baseline allows {allowed}")
+            failed = True
+        elif have < allowed:
+            print(f"note {path}: {have} error(s) < baseline {allowed} — "
+                  f"ratchet down with `python tools/pyright_gate.py --write`")
+    print(f"pyright: {summary.get('errorCount', '?')} error(s), "
+          f"{summary.get('warningCount', '?')} warning(s) over "
+          f"{summary.get('filesAnalyzed', '?')} file(s); "
+          f"baseline {'FAILED' if failed else 'ok'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
